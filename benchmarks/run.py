@@ -1,0 +1,59 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections:
+1. pingpong          — paper Fig. 1 (lanes sweep × 3 designs)
+2. lcx_collectives   — LCX ring/pairwise vs native XLA collectives
+3. moe_dispatch      — EP a2a dispatch throughput (LCX a2a backends)
+4. kernels_bench     — Pallas kernels vs oracles
+CSV outputs land in results/.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true",
+                   help="trim the lane sweep for CI")
+    args = p.parse_args()
+
+    os.makedirs("results", exist_ok=True)
+
+    print("=" * 72)
+    print("1. ping-pong (paper Fig. 1: message rate vs concurrent lanes)")
+    print("=" * 72)
+    import pingpong
+    if args.fast:
+        pingpong.LANES = (1, 8, 64)
+        pingpong.REPEAT = 10
+    pingpong.main(out_csv="results/pingpong.csv")
+
+    print("=" * 72)
+    print("2. LCX collectives vs native")
+    print("=" * 72)
+    import lcx_collectives
+    lcx_collectives.main(out_csv="results/lcx_collectives.csv")
+
+    print("=" * 72)
+    print("3. MoE EP dispatch (LCX a2a)")
+    print("=" * 72)
+    import moe_dispatch
+    moe_dispatch.main(out_csv="results/moe_dispatch.csv")
+
+    print("=" * 72)
+    print("4. Pallas kernels vs oracles")
+    print("=" * 72)
+    import kernels_bench
+    kernels_bench.main(out_csv="results/kernels.csv")
+
+    print("benchmarks complete; CSVs in results/")
+
+
+if __name__ == "__main__":
+    main()

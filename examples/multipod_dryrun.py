@@ -1,0 +1,30 @@
+"""Multi-pod launch example: lower+compile one architecture for the
+production meshes (single pod 16x16 and two pods 2x16x16) and print the
+roofline breakdown — the exact flow a cluster launcher runs before
+committing 512 chips.
+
+Run:  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# MUST precede any jax import (jax locks the device count on first init)
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-0.5b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    print(f"== {arch} {shape} : single pod (16x16 = 256 chips) ==")
+    run_cell(arch, shape, multi_pod=False)
+    print(f"== {arch} {shape} : two pods (2x16x16 = 512 chips) ==")
+    run_cell(arch, shape, multi_pod=True)
+    print("multipod_dryrun OK")
+
+
+if __name__ == "__main__":
+    main()

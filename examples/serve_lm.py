@@ -1,0 +1,65 @@
+"""Serving example: continuous batching over a hybrid (Mamba+attention)
+model — prefill into slots, per-tick batched decode, slot recycling,
+and a greedy-consistency check against the full forward pass.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import apply_model, init_model
+from repro.serving import Request, ServeConfig, ServingEngine
+
+
+def main():
+    cfg = ModelConfig(
+        name="jamba-mini", family="hybrid",
+        n_layers=8, d_model=128, n_heads=8, n_kv_heads=2, d_ff=256,
+        vocab=1024, attn_layer_period=4, attn_layer_offset=1,
+        n_experts=4, n_experts_per_tok=2, moe_d_ff=128,
+        expert_layer_period=2, expert_layer_offset=1,
+        moe_backend="sort", capacity_factor=4.0,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+        dtype=jnp.float32, param_dtype=jnp.float32, q_block=32,
+    )
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(
+        n_slots=4, max_seq=128, max_new_tokens=16))
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for rid in range(10):
+        plen = int(rng.integers(4, 16))
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32)))
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+
+    tok = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {tok} tokens in {dt:.1f}s "
+          f"({tok/dt:.1f} tok/s)  stats={eng.stats}")
+
+    # consistency: engine output == token-by-token full forward (greedy)
+    r = done[0]
+    toks = list(r.prompt)
+    for _ in range(len(r.output)):
+        lg, _ = apply_model(cfg, params, jnp.asarray(toks, jnp.int32)[None])
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    assert toks[len(r.prompt):] == r.output, "engine diverged from model"
+    print("greedy consistency OK")
+    for r in done[:3]:
+        print(f"  rid={r.rid}: {list(r.prompt)[:5]}... -> {r.output[:8]}")
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end training driver: a ~smoke-size qwen2-style LM trained for
+a few hundred steps with the full production substrate — sharded params
+(if >1 device), microbatched gradient accumulation, checkpointing, an
+injected node failure (recovered from the last checkpoint), and
+straggler monitoring.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import FailureInjector, TrainConfig, Trainer
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--d-model", type=int, default=128)
+    p.add_argument("--layers", type=int, default=4)
+    args = p.parse_args()
+
+    # ~100M-class config scaled to CPU budget: same family as qwen2
+    cfg = ModelConfig(
+        name="qwen2-mini", family="dense",
+        n_layers=args.layers, d_model=args.d_model, n_heads=8,
+        n_kv_heads=2, d_ff=4 * args.d_model, vocab=2048,
+        qkv_bias=True, tie_embeddings=True,
+        dtype=jnp.float32, param_dtype=jnp.float32, remat="none",
+        q_block=64,
+    )
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainConfig(
+            lr=1e-3, warmup=30, total_steps=args.steps,
+            seq_len=128, global_batch=16, grad_accum=2,
+            ckpt_dir=ckpt_dir, ckpt_every=50, log_every=20,
+        )
+        injector = FailureInjector(fail_at=[args.steps // 2])
+        trainer = Trainer(cfg, tcfg, mesh=make_host_mesh(),
+                          failure_injector=injector)
+        out = trainer.run(args.steps)
+        print(f"\nfinal step {out['final_step']}, "
+              f"{out['failures']} failure(s) recovered")
+        first = trainer.metrics_log[0]
+        last = trainer.metrics_log[-1]
+        print(f"loss: {first['loss']:.3f} -> {last['loss']:.3f}")
+        for m in trainer.metrics_log:
+            print(f"  step {m['step']:4d}  loss={m['loss']:.4f}  "
+                  f"lr={m['lr']:.2e}  {m['dt']*1e3:6.0f}ms  "
+                  f"{m['straggler']}")
+        assert last["loss"] < first["loss"], "training did not learn"
+        print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

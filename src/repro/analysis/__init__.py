@@ -1,0 +1,5 @@
+from .roofline import (RooflineReport, analyze_compiled, collective_bytes,
+                       model_flops, parse_collectives)
+
+__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes",
+           "model_flops", "parse_collectives"]

@@ -1,0 +1,158 @@
+"""Checkpointing: atomic, async, resumable.
+
+Layout::
+
+    <dir>/step_000123/
+        leaf_00000.npy ...        one file per pytree leaf
+        manifest.json             treedef + leaf names/shapes/dtypes
+        COMMIT                    written last — presence marks validity
+
+Writes go to ``step_N.tmp`` and are renamed only after COMMIT exists, so
+a crash mid-write never corrupts the restore path (the fault-tolerance
+loop in `repro.runtime` restarts from ``latest_step``).  The async
+writer snapshots device arrays to host (blocking only for D2H) and does
+file I/O on a worker thread so training continues during the write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree) -> Tuple[List[str], List[Any], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    names, leaves, _ = _leaf_paths(tree)
+    host = [np.asarray(x) for x in leaves]
+    return _write(ckpt_dir, step, names, host, extra)
+
+
+def _write(ckpt_dir: str, step: int, names: List[str],
+           host: List[np.ndarray], extra: Optional[Dict[str, Any]]) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (name, arr) in enumerate(zip(names, host)):
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, d)
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(full, "COMMIT")):
+            out.append(int(d[len("step_"):]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, target: PyTree,
+                       step: Optional[int] = None,
+                       shardings: Optional[PyTree] = None
+                       ) -> Tuple[PyTree, int, Dict[str, Any]]:
+    """Restore into the structure of ``target``.  With ``shardings``
+    (mirroring the tree), leaves are placed directly onto devices."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    names, leaves, treedef = _leaf_paths(target)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    out_leaves = []
+    shard_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
+        if shardings is not None else [None] * len(leaves))
+    for name, ref, sh in zip(names, leaves, shard_leaves):
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = np.load(os.path.join(d, by_name[name]["file"]))
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {name}: checkpoint shape {arr.shape} != "
+                f"target {ref.shape} — reshard-restore requires matching "
+                "global shapes")
+        if sh is not None:
+            out_leaves.append(jax.device_put(arr, sh))
+        else:
+            out_leaves.append(jax.device_put(
+                arr.astype(np.dtype(jax.numpy.dtype(ref.dtype)))))
+    return (jax.tree_util.tree_unflatten(treedef, out_leaves), step,
+            manifest.get("extra", {}))
+
+
+class AsyncCheckpointer:
+    """Snapshot to host synchronously, write files on a worker thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3) -> None:
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: PyTree,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        names, leaves, _ = _leaf_paths(tree)
+        host = [np.asarray(x) for x in leaves]   # D2H, blocking
+
+        def work():
+            try:
+                _write(self.ckpt_dir, step, names, host, extra)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = list_steps(self.ckpt_dir)
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

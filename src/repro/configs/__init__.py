@@ -1,0 +1,5 @@
+from .base import (ARCH_IDS, SHAPES, LayerSpec, ModelConfig, cells,
+                   get_config, get_smoke_config, list_archs, register)
+
+__all__ = ["ARCH_IDS", "SHAPES", "LayerSpec", "ModelConfig", "cells",
+           "get_config", "get_smoke_config", "list_archs", "register"]

@@ -1,0 +1,27 @@
+"""hubert-xlarge  [audio]  48L d_model=1280 16H (kv=16) d_ff=5120
+vocab=504 — encoder-only, same arch as w2v2  [arXiv:2106.07447;
+unverified].  Modality frontend is a STUB: input_specs provides
+precomputed frame embeddings [B, S, d_model]."""
+import jax.numpy as jnp
+
+from .base import ModelConfig, register
+
+
+@register("hubert-xlarge")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, d_ff=5120,
+        vocab=504, causal=False, norm="layer", act="gelu",
+        frontend="audio", max_seq_len=4096,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160,
+        vocab=31, causal=False, norm="layer", act="gelu",
+        frontend="audio",
+        dtype=jnp.float32, param_dtype=jnp.float32, q_block=16,
+    )

@@ -1,0 +1,48 @@
+"""LCX — the paper's contribution adapted to JAX/TPU.
+
+A Lightweight Communication Interface for asynchronous many-task
+execution inside SPMD JAX programs: resources (Device, PacketPool,
+MatchingEngine, completion objects) composed orthogonally with
+operations (send/recv, put/get, active messages, progress), expressed
+through the *objectized flexible function* idiom.
+
+Typical use (under ``shard_map`` over the device's axis)::
+
+    import repro.core as lcx
+
+    dev  = lcx.Device(axis="model", mesh_shape={"model": 16})
+    sync = lcx.Synchronizer(threshold=1)
+    lcx.put_x(x).perm(lcx.Perm.shift(1)).remote_comp(sync).device(dev)()
+    lcx.progress()
+    (ev,) = sync.wait()            # ev.payload == neighbour's x
+"""
+from .flex import FlexOp, REQUIRED, plain
+from .attr import (get_global_attr, reset_global_attrs, set_global_attr)
+from .resources import (CompletionObject, CompletionQueue, CounterCompletion,
+                        Device, Event, FunctionHandler, MatchingEngine,
+                        MemoryRegion, PacketPool, Perm, PostedOp,
+                        Synchronizer, IMMEDIATE_RCOMP_BITS,
+                        IMMEDIATE_TAG_BITS, MAX_RCOMP_BITS, MAX_TAG_BITS,
+                        finalize, init, runtime)
+from .ops import (PostHandle, am, am_x, get, get_x, progress, progress_x,
+                  put, put_x, recv, recv_x, register_memory, register_rcomp,
+                  send, send_x, sendrecv)
+from .collectives import (all_gather, all_gather_x, all_reduce, all_reduce_x,
+                          all_to_all, all_to_all_x, barrier, broadcast,
+                          broadcast_x, reduce_scatter, reduce_scatter_x)
+
+__all__ = [
+    "FlexOp", "REQUIRED", "plain",
+    "get_global_attr", "set_global_attr", "reset_global_attrs",
+    "CompletionObject", "CompletionQueue", "CounterCompletion", "Device",
+    "Event", "FunctionHandler", "MatchingEngine", "MemoryRegion",
+    "PacketPool", "Perm", "PostedOp", "Synchronizer",
+    "IMMEDIATE_RCOMP_BITS", "IMMEDIATE_TAG_BITS", "MAX_RCOMP_BITS",
+    "MAX_TAG_BITS", "finalize", "init", "runtime",
+    "PostHandle", "am", "am_x", "get", "get_x", "progress", "progress_x",
+    "put", "put_x", "recv", "recv_x", "register_memory", "register_rcomp",
+    "send", "send_x", "sendrecv",
+    "all_gather", "all_gather_x", "all_reduce", "all_reduce_x",
+    "all_to_all", "all_to_all_x", "barrier", "broadcast", "broadcast_x",
+    "reduce_scatter", "reduce_scatter_x",
+]

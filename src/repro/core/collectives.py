@@ -1,0 +1,206 @@
+"""Collectives built on LCX point-to-point operations.
+
+LCI's position is that AMT communication is point-to-point; collectives
+are *library-level* compositions over p2p (the way RCCL/UCC build them
+over verbs).  We provide ring algorithms whose every step is an LCX
+``put`` with an explicit ``progress()`` placement (the overlap knob), and
+a ``native`` backend that lowers to the XLA collective directly so the
+two can be compared in the roofline (§Perf iterates on this choice).
+
+All functions must run under ``shard_map`` with the device's axis bound.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .flex import FlexOp, plain
+from .resources import Device, Perm, Synchronizer, runtime
+from . import ops as lcx_ops
+
+
+def _axis_of(device: Optional[Device]) -> str:
+    dev = device if device is not None else runtime().default_device
+    if dev.axis is None:
+        raise ValueError("collective needs a device bound to a mesh axis")
+    return dev.axis
+
+
+def _dev(device: Optional[Device]) -> Device:
+    return device if device is not None else runtime().default_device
+
+
+def _lcx_shift(x: Any, k: int, device: Device, tag: int) -> Any:
+    """One ring hop expressed as an LCX put + progress + completion."""
+    sync = Synchronizer(threshold=1)
+    lcx_ops.put_x(x).perm(Perm.shift(k)).tag(tag).remote_comp(sync) \
+        .device(device)()
+    lcx_ops.progress_x().device(device)()
+    (ev,) = sync.wait()
+    return ev.payload
+
+
+# ---------------------------------------------------------------------------
+# all-gather (ring)
+# ---------------------------------------------------------------------------
+class all_gather_x(FlexOp):
+    """Gather each shard's ``x`` along a new leading axis (then merged into
+    dim 0), ring or native backend."""
+
+    _positional = ("x",)
+    _optional = dict(device=None, backend="ring", tiled=True, tag=0)
+
+    def _invoke(self) -> Any:
+        x = self.arg("x")
+        dev = _dev(self.arg_or("device", None))
+        axis = _axis_of(dev)
+        backend = self.arg_or("backend", "ring")
+        tiled = self.arg_or("tiled", True)
+        if backend == "native":
+            return lax.all_gather(x, axis, tiled=tiled)
+        n = dev.axis_size
+        idx = lax.axis_index(axis)
+        buf = jnp.zeros((n,) + x.shape, x.dtype)
+        buf = lax.dynamic_update_index_in_dim(buf, x, idx, 0)
+        cur = x
+        for step in range(n - 1):
+            cur = _lcx_shift(cur, 1, dev, self.arg_or("tag", 0))
+            src = (idx - step - 1) % n
+            buf = lax.dynamic_update_index_in_dim(buf, cur, src, 0)
+        if tiled:
+            return buf.reshape((n * x.shape[0],) + x.shape[1:]) \
+                if x.ndim else buf
+        return buf
+
+
+# ---------------------------------------------------------------------------
+# reduce-scatter (ring)
+# ---------------------------------------------------------------------------
+class reduce_scatter_x(FlexOp):
+    """Sum-reduce ``x`` across the axis, leaving each shard with its
+    1/N slice of dim 0."""
+
+    _positional = ("x",)
+    _optional = dict(device=None, backend="ring", tag=0)
+
+    def _invoke(self) -> Any:
+        x = self.arg("x")
+        dev = _dev(self.arg_or("device", None))
+        axis = _axis_of(dev)
+        if self.arg_or("backend", "ring") == "native":
+            return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+        n = dev.axis_size
+        if x.shape[0] % n:
+            raise ValueError(f"reduce_scatter dim0 {x.shape[0]} % {n}")
+        idx = lax.axis_index(axis)
+        chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        # The accumulator carrying chunk c starts at rank c+1 and moves +1
+        # per hop; after n-1 hops it has visited every rank and lands at
+        # rank c.  So rank i seeds with its local chunk (i-1) and, at hop
+        # s (1-indexed), the arriving accumulator carries chunk (i-s-1),
+        # to which we add our local copy.
+        acc = lax.dynamic_index_in_dim(chunks, (idx - 1) % n, 0,
+                                       keepdims=False)
+        for step in range(n - 1):
+            acc = _lcx_shift(acc, 1, dev, self.arg_or("tag", 0))
+            take = (idx - step - 2) % n
+            acc = acc + lax.dynamic_index_in_dim(chunks, take, 0,
+                                                 keepdims=False)
+        return acc
+
+
+# ---------------------------------------------------------------------------
+# all-reduce = reduce-scatter + all-gather (ring) or native psum
+# ---------------------------------------------------------------------------
+class all_reduce_x(FlexOp):
+    _positional = ("x",)
+    _optional = dict(device=None, backend="ring", tag=0)
+
+    def _invoke(self) -> Any:
+        x = self.arg("x")
+        dev = _dev(self.arg_or("device", None))
+        axis = _axis_of(dev)
+        backend = self.arg_or("backend", "ring")
+        if backend == "native":
+            return lax.psum(x, axis)
+        n = dev.axis_size
+        shape = x.shape
+        flat = x.reshape(-1)
+        pad = (-flat.shape[0]) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        rs = reduce_scatter_x(flat).device(dev).backend(backend) \
+            .tag(self.arg_or("tag", 0))()
+        ag = all_gather_x(rs).device(dev).backend(backend) \
+            .tag(self.arg_or("tag", 0) + 1)()
+        if pad:
+            ag = ag[:-pad]
+        return ag.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# all-to-all (pairwise LCX puts or native)
+# ---------------------------------------------------------------------------
+class all_to_all_x(FlexOp):
+    """Exchange chunk i of dim 0 with rank i.  ``x`` dim 0 must equal the
+    axis size times the chunk size; pairwise backend posts n-1 LCX puts."""
+
+    _positional = ("x",)
+    _optional = dict(device=None, backend="pairwise", tag=0)
+
+    def _invoke(self) -> Any:
+        x = self.arg("x")
+        dev = _dev(self.arg_or("device", None))
+        axis = _axis_of(dev)
+        n = dev.axis_size
+        if x.shape[0] % n:
+            raise ValueError(f"all_to_all dim0 {x.shape[0]} % {n}")
+        if self.arg_or("backend", "pairwise") == "native":
+            c = x.shape[0] // n
+            xs = x.reshape((n, c) + x.shape[1:])
+            out = lax.all_to_all(xs, axis, split_axis=0, concat_axis=0,
+                                 tiled=False)
+            return out.reshape((n * c,) + x.shape[1:])
+        idx = lax.axis_index(axis)
+        chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        out = jnp.zeros_like(chunks)
+        mine = lax.dynamic_index_in_dim(chunks, idx, 0, keepdims=False)
+        out = lax.dynamic_update_index_in_dim(out, mine, idx, 0)
+        for k in range(1, n):
+            # send the chunk destined for rank (idx+k); receive from (idx-k)
+            piece = lax.dynamic_index_in_dim(chunks, (idx + k) % n, 0,
+                                             keepdims=False)
+            got = _lcx_shift(piece, k, dev, self.arg_or("tag", 0) + k)
+            out = lax.dynamic_update_index_in_dim(out, got, (idx - k) % n, 0)
+        return out.reshape(x.shape)
+
+
+class broadcast_x(FlexOp):
+    """Broadcast from ``root`` (native masked-psum)."""
+
+    _positional = ("x",)
+    _optional = dict(device=None, root=0)
+
+    def _invoke(self) -> Any:
+        x = self.arg("x")
+        dev = _dev(self.arg_or("device", None))
+        axis = _axis_of(dev)
+        idx = lax.axis_index(axis)
+        mask = (idx == self.arg_or("root", 0)).astype(x.dtype)
+        return lax.psum(x * mask, axis)
+
+
+def barrier(device: Optional[Device] = None) -> None:
+    dev = _dev(device)
+    if dev.axis is not None:
+        lax.psum(jnp.zeros((), jnp.float32), dev.axis)
+
+
+all_gather = plain(all_gather_x)
+reduce_scatter = plain(reduce_scatter_x)
+all_reduce = plain(all_reduce_x)
+all_to_all = plain(all_to_all_x)
+broadcast = plain(broadcast_x)

@@ -1,0 +1,386 @@
+"""LCX communication-posting operations (paper §2.2) as objectized
+flexible functions (paper §3.1).
+
+All posting operations are **asynchronous**: they pend the operation and
+return a :class:`PostHandle`.  Completion is observed through the
+completion object passed via ``.comp(...)`` (or an auto-allocated
+:class:`~repro.core.resources.Synchronizer`) *after* an explicit
+:func:`progress` call — the paper's explicit-progress design point.
+
+Naming follows the binding guideline: flexible form ``send_x``, plain
+shorthand ``send`` with positional arguments only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .flex import FlexOp, plain
+from .resources import (CompletionObject, CompletionQueue, Device, Event,
+                        FunctionHandler, MatchingEngine, MemoryRegion,
+                        PacketPool, Perm, PostedOp, Synchronizer,
+                        IMMEDIATE_RCOMP_BITS, IMMEDIATE_TAG_BITS,
+                        MAX_RCOMP_BITS, MAX_TAG_BITS, runtime)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+def _as_array(x: Any) -> Any:
+    if isinstance(x, MemoryRegion):
+        x.uses += 1
+        return x.array
+    return x
+
+
+def _nbytes(x: Any) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize if hasattr(
+        x, "shape") else 0
+
+
+def _default_device(op: FlexOp) -> Device:
+    dev = op.arg_or("device", None)
+    return dev if dev is not None else runtime().default_device
+
+
+def _default_engine(op: FlexOp) -> MatchingEngine:
+    eng = op.arg_or("matching_engine", None)
+    return eng if eng is not None else runtime().default_engine
+
+
+def _default_comp(op: FlexOp) -> CompletionObject:
+    comp = op.arg_or("comp", None)
+    return comp if comp is not None else Synchronizer(threshold=1)
+
+
+def _check_tag(tag: int, bits: int, what: str) -> None:
+    if not (0 <= tag < (1 << bits)):
+        raise ValueError(f"{what} {tag} out of range for {bits}-bit field")
+
+
+@dataclasses.dataclass(eq=False)
+class PostHandle:
+    """Returned by every posting operation."""
+
+    comp: CompletionObject
+    posted: PostedOp
+
+    def wait(self) -> List[Event]:
+        if isinstance(self.comp, Synchronizer):
+            return self.comp.wait()
+        raise TypeError("wait() only on Synchronizer completions; poll the "
+                        "completion queue / handler instead")
+
+    def payload(self) -> Any:
+        return self.wait()[0].payload
+
+
+# ---------------------------------------------------------------------------
+# send / recv (two-sided, matched)
+# ---------------------------------------------------------------------------
+class send_x(FlexOp):
+    """Post an asynchronous tagged send.
+
+    ``send_x(buf).perm(Perm.shift(1)).tag(3).comp(cq).post()`` — any
+    optional argument, any order; reusable.
+    """
+
+    _positional = ("buffer",)
+    _optional = dict(perm=None, tag=0, comp=None, device=None,
+                     matching_engine=None, ctx=None, allow_aggregation=True)
+
+    def _invoke(self) -> PostHandle:
+        buf = _as_array(self.arg("buffer"))
+        dev = _default_device(self)
+        eng = _default_engine(self)
+        comp = _default_comp(self)
+        tag = self.arg_or("tag", 0)
+        _check_tag(tag, MAX_TAG_BITS, "send tag")
+        op = PostedOp(kind="send", buffer=buf, perm=self.arg_or("perm", None),
+                      tag=tag, comp=comp, device=dev,
+                      seq=runtime().next_seq(),
+                      context=self.arg_or("ctx", None), op_name="send",
+                      allow_aggregation=self.arg_or("allow_aggregation", True))
+        dev.stats["posted"] += 1
+        runtime().enqueue_matches(eng.post(op))
+        return PostHandle(comp=comp, posted=op)
+
+
+class recv_x(FlexOp):
+    """Post an asynchronous tagged receive.  ``like`` gives the shape and
+    dtype of the incoming message (the LCI recv buffer)."""
+
+    _positional = ("like",)
+    _optional = dict(perm=None, tag=0, comp=None, device=None,
+                     matching_engine=None, ctx=None)
+
+    def _invoke(self) -> PostHandle:
+        like = self.arg("like")
+        dev = _default_device(self)
+        eng = _default_engine(self)
+        comp = _default_comp(self)
+        tag = self.arg_or("tag", 0)
+        _check_tag(tag, MAX_TAG_BITS, "recv tag")
+        op = PostedOp(kind="recv", buffer=like,
+                      perm=self.arg_or("perm", None), tag=tag, comp=comp,
+                      device=dev, seq=runtime().next_seq(),
+                      context=self.arg_or("ctx", None), op_name="recv")
+        dev.stats["posted"] += 1
+        runtime().enqueue_matches(eng.post(op))
+        return PostHandle(comp=comp, posted=op)
+
+
+# ---------------------------------------------------------------------------
+# put / get / active message (one-sided, unmatched)
+# ---------------------------------------------------------------------------
+class put_x(FlexOp):
+    """One-sided RDMA-write analogue.  With ``remote_comp`` set it becomes
+    *RDMA write with signal*; the immediate-data limits of the paper are
+    enforced (16-bit tag, 15-bit remote handler) unless the device allows
+    payload-carried metadata."""
+
+    _positional = ("buffer",)
+    _optional = dict(perm=None, tag=0, comp=None, remote_comp=None,
+                     device=None, ctx=None, allow_aggregation=True)
+
+    _OP = "put"
+
+    def _invoke(self) -> PostHandle:
+        buf = _as_array(self.arg("buffer"))
+        dev = _default_device(self)
+        comp = _default_comp(self)
+        tag = self.arg_or("tag", 0)
+        rcomp = self.arg_or("remote_comp", None)
+        if isinstance(rcomp, int):
+            rid, rcomp_obj = rcomp, runtime().rcomp(rcomp)
+        elif rcomp is not None:
+            rid, rcomp_obj = runtime().register_rcomp(rcomp), rcomp
+        else:
+            rid, rcomp_obj = 0, None
+        if rcomp_obj is not None and self._OP == "put":
+            # paper §2.2: put-with-remote-signal rides the 32-bit immediate
+            # field: 16-bit tag + 15-bit remote handler.  Wider values fall
+            # back to payload-carried metadata (extra memory references) if
+            # the device permits.
+            if (tag >= (1 << IMMEDIATE_TAG_BITS)
+                    or rid >= (1 << IMMEDIATE_RCOMP_BITS)):
+                if not dev.get_attr_allow_payload_metadata():
+                    raise ValueError(
+                        "put with remote signal: tag/remote-handler exceed "
+                        f"the immediate-data limits ({IMMEDIATE_TAG_BITS}/"
+                        f"{IMMEDIATE_RCOMP_BITS} bits) and payload-carried "
+                        "metadata is disabled on this device")
+                dev.stats["payload_metadata_msgs"] = (
+                    dev.stats.get("payload_metadata_msgs", 0) + 1)
+        _check_tag(tag, MAX_TAG_BITS, f"{self._OP} tag")
+        if rid >= (1 << MAX_RCOMP_BITS):
+            raise ValueError("remote completion handler id too wide")
+        send = PostedOp(kind="send", buffer=buf,
+                        perm=self.arg_or("perm", None), tag=tag, comp=comp,
+                        device=dev, seq=runtime().next_seq(),
+                        context=self.arg_or("ctx", None), op_name=self._OP,
+                        remote_comp=rcomp_obj,
+                        allow_aggregation=self.arg_or(
+                            "allow_aggregation", True))
+        recv = PostedOp(kind="recv", buffer=buf, perm=send.perm, tag=tag,
+                        comp=rcomp_obj, device=dev, seq=send.seq,
+                        context=self.arg_or("ctx", None), op_name=self._OP)
+        dev.stats["posted"] += 1
+        runtime().enqueue_matches([(send, recv)])
+        return PostHandle(comp=comp, posted=send)
+
+
+class am_x(put_x):
+    """Active message: payload transfer plus a *remote completion object of
+    any type* (function handler, completion queue, synchronizer…) signalled
+    at the destination (paper §2.2).  Defaults the remote completion to the
+    runtime's default completion queue."""
+
+    _OP = "am"
+
+    def _invoke(self) -> PostHandle:
+        if self.arg_or("remote_comp", None) is None:
+            self._args["remote_comp"] = runtime().default_cq
+        return super()._invoke()
+
+
+class get_x(FlexOp):
+    """One-sided RDMA-read analogue: fetch ``like``-shaped data from the
+    peer defined by ``perm`` (a src->dst pattern read *backwards*)."""
+
+    _positional = ("like",)
+    _optional = dict(perm=None, tag=0, comp=None, device=None, ctx=None)
+
+    def _invoke(self) -> PostHandle:
+        like = _as_array(self.arg("like"))
+        dev = _default_device(self)
+        comp = _default_comp(self)
+        tag = self.arg_or("tag", 0)
+        _check_tag(tag, MAX_TAG_BITS, "get tag")
+        perm = self.arg_or("perm", None)
+        send = PostedOp(kind="send", buffer=like, perm=perm, tag=tag,
+                        comp=None, device=dev, seq=runtime().next_seq(),
+                        context=self.arg_or("ctx", None), op_name="get")
+        recv = PostedOp(kind="recv", buffer=like, perm=perm, tag=tag,
+                        comp=comp, device=dev, seq=send.seq,
+                        context=self.arg_or("ctx", None), op_name="get")
+        dev.stats["posted"] += 1
+        runtime().enqueue_matches([(send, recv)])
+        return PostHandle(comp=comp, posted=recv)
+
+
+# ---------------------------------------------------------------------------
+# progress (explicit, user-driven)
+# ---------------------------------------------------------------------------
+class progress_x(FlexOp):
+    """Materialize matched transfers and signal completion objects.
+
+    The paper's explicit progress function: "allowing users to determine
+    when and how frequently to invoke the communication progress engine."
+    Trace-time meaning: *where* you call progress is where the transfers
+    are placed in the program — the overlap knob.
+    """
+
+    _positional = ()
+    _optional = dict(device=None, pool=None, max_transfers=None)
+
+    def _invoke(self) -> int:
+        dev_filter = self.arg_or("device", None)
+        pool = self.arg_or("pool", None) or runtime().default_pool
+        matches = runtime().take_ready(dev_filter)
+        if not matches:
+            return 0
+        matches.sort(key=lambda m: m[0].seq)
+        limit = self.arg_or("max_transfers", None)
+        n = _execute(matches, pool, limit)
+        if dev_filter is not None:
+            dev_filter.stats["progressed"] += 1
+        return n
+
+
+def _execute(matches: List[Tuple[PostedOp, PostedOp]],
+             pool: Optional[PacketPool], limit: Optional[int]) -> int:
+    """Group, aggregate, and run matched transfers."""
+    groups: Dict[Any, List[Tuple[PostedOp, PostedOp]]] = {}
+    for s, r in matches:
+        axis = s.device.axis
+        if (pool is not None and pool.get_attr_aggregate()
+                and s.allow_aggregation and axis is not None
+                and pool.is_eager(_nbytes(s.buffer))):
+            pkey = s.perm.key(s.device.axis_size) if s.perm else ()
+            key = ("agg", axis, pkey, jnp.dtype(s.buffer.dtype).name,
+                   id(s.device))
+            if pool is not None:
+                pool.stats["eager_msgs"] += 1
+        else:
+            key = ("solo", id(s))
+            if pool is not None and axis is not None:
+                pool.stats["rendezvous_msgs"] += 1
+        groups.setdefault(key, []).append((s, r))
+
+    n_transfers = 0
+    for key, grp in groups.items():
+        if limit is not None and n_transfers >= limit:
+            # leave the rest pending
+            runtime().enqueue_matches(grp)
+            continue
+        if key[0] == "agg" and len(grp) > 1:
+            _run_aggregated(grp, pool)
+        else:
+            for s, r in grp:
+                _run_single(s, r)
+                if pool is not None and key[0] == "solo":
+                    pool.stats["raw_transfers"] += 1
+        n_transfers += 1
+    return n_transfers
+
+
+def _permute(value: Any, dev: Device, perm: Optional[Perm]) -> Any:
+    axis = dev.axis
+    if axis is None:  # loopback / sim device
+        return value
+    pairs = perm.pairs_for(dev.axis_size) if perm else [
+        (i, i) for i in range(dev.axis_size)]
+    dev.stats["transfers"] += 1
+    dev.stats["bytes_moved"] += _nbytes(value)
+    return lax.ppermute(value, axis_name=axis, perm=pairs)
+
+
+def _run_single(s: PostedOp, r: PostedOp) -> None:
+    value = _permute(s.buffer, s.device, s.perm)
+    if getattr(r.buffer, "shape", None) is not None and hasattr(
+            s.buffer, "shape"):
+        if tuple(r.buffer.shape) != tuple(s.buffer.shape):
+            raise ValueError(
+                f"matched send/recv shape mismatch: send {s.buffer.shape} "
+                f"vs recv {r.buffer.shape} (tag={s.tag})")
+    _signal(s, r, value)
+
+
+def _run_aggregated(grp: List[Tuple[PostedOp, PostedOp]],
+                    pool: Optional[PacketPool]) -> None:
+    """Pack eager messages sharing (axis, perm, dtype) into one transfer."""
+    grp = sorted(grp, key=lambda m: m[0].seq)
+    flats = [jnp.ravel(s.buffer) for s, _ in grp]
+    sizes = [f.shape[0] for f in flats]
+    packed = jnp.concatenate(flats, axis=0)
+    out = _permute(packed, grp[0][0].device, grp[0][0].perm)
+    if pool is not None:
+        pool.stats["aggregated_transfers"] += 1
+    off = 0
+    for (s, r), sz in zip(grp, sizes):
+        piece = lax.dynamic_slice_in_dim(out, off, sz, axis=0)
+        off += sz
+        _signal(s, r, piece.reshape(s.buffer.shape))
+
+
+def _signal(s: PostedOp, r: PostedOp, value: Any) -> None:
+    if s.comp is not None:
+        s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
+                            perm=s.perm, remote=False, context=s.context))
+    if r.comp is not None:
+        remote = s.op_name in ("put", "am")
+        r.comp.signal(Event(payload=value, op=s.op_name, tag=r.tag,
+                            perm=r.perm, remote=remote, context=r.context))
+
+
+# ---------------------------------------------------------------------------
+# Convenience composites
+# ---------------------------------------------------------------------------
+def sendrecv(buffer: Any, perm: Perm, tag: int = 0,
+             device: Optional[Device] = None,
+             matching_engine: Optional[MatchingEngine] = None) -> Any:
+    """Matched shift: send along ``perm`` and receive the inbound message.
+    Posts both sides, progresses, returns the received array."""
+    sync = Synchronizer(threshold=2)
+    send_x(buffer).perm(perm).tag(tag).comp(sync).device(device) \
+        .matching_engine(matching_engine)()
+    recv_x(buffer).perm(perm).tag(tag).comp(sync).device(device) \
+        .matching_engine(matching_engine)()
+    progress_x()()
+    events = sync.wait()
+    (payload,) = [e.payload for e in events if e.payload is not None]
+    return payload
+
+
+def register_memory(array: Any) -> MemoryRegion:
+    return runtime().register_memory(array)
+
+
+def register_rcomp(comp: CompletionObject) -> int:
+    return runtime().register_rcomp(comp)
+
+
+# Plain-function shorthands (binding guideline).
+send = plain(send_x)
+recv = plain(recv_x)
+put = plain(put_x)
+get = plain(get_x)
+am = plain(am_x)
+progress = plain(progress_x)

@@ -1,0 +1,521 @@
+"""LCX resources (paper §2.2).
+
+The interface consists of *resources* and *operations*.  Major resources:
+
+- :class:`Device` — encapsulates the low-level network resource.  On TPU
+  the "network" is the ICI mesh accessed through compiled collectives;
+  a Device names a mesh axis (its communicator) plus a backend and
+  tunable attributes.
+- :class:`PacketPool` — pre-registered fixed-size internal buffers.  At
+  the JAX level the pool enables *message aggregation*: many fine-grained
+  eager-protocol messages are packed into one transfer (the TPU analogue
+  of doorbell batching / packet reuse).
+- :class:`MatchingEngine` — matches sends with receives.  Two
+  implementations (``queue`` in-order, ``map`` keyed) and five policies
+  (``none``, ``rank_only``, ``tag_only``, ``rank_tag``, ``custom``).
+- Completion objects — :class:`Synchronizer`, :class:`CompletionQueue`,
+  :class:`FunctionHandler`; all subclassable via ``signal()``.
+
+Resources map to operations independently: two operations may share a
+device but use different completion objects; sends and recvs posted on
+*different devices* still match if they share a matching engine.
+
+Execution model (hardware adaptation, see DESIGN.md §2): LCI posts
+operations at *runtime* from many threads; LCX posts at *trace time*
+inside one SPMD program.  Posted operations are pended; the
+:func:`~repro.core.ops.progress` operation resolves matches and
+materializes transfers as ``lax.ppermute``/``lax.all_to_all`` ops (or
+Pallas remote-DMA kernels), then signals completion objects.  Completion
+is data availability of the traced value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attr import HasAttrs
+
+# Interface constants (paper §2.2): immediate-data-constrained limits for
+# put-with-remote-signal; full-width limits elsewhere.
+IMMEDIATE_TAG_BITS = 16
+IMMEDIATE_RCOMP_BITS = 15
+MAX_TAG_BITS = 64
+MAX_RCOMP_BITS = 32
+
+
+# ---------------------------------------------------------------------------
+# Permutation specs (who talks to whom on a device's axis)
+# ---------------------------------------------------------------------------
+class Perm:
+    """A trace-time communication pattern on a device axis.
+
+    In SPMD there is no runtime "destination rank" argument; the pattern
+    *is* the argument.  ``Perm.shift(1)`` is the ring successor,
+    ``Perm.pairs([(0, 3)])`` a single point-to-point message (other ranks
+    carry padding), ``Perm.all_to(r)``/``Perm.from_(r)`` fan-in/fan-out.
+    """
+
+    def __init__(self, fn: Callable[[int], List[Tuple[int, int]]], name: str):
+        self._fn = fn
+        self.name = name
+
+    def pairs_for(self, axis_size: int) -> List[Tuple[int, int]]:
+        return self._fn(axis_size)
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def shift(k: int) -> "Perm":
+        return Perm(lambda n: [(i, (i + k) % n) for i in range(n)],
+                    f"shift({k})")
+
+    @staticmethod
+    def pairs(ps: Sequence[Tuple[int, int]]) -> "Perm":
+        ps = [tuple(p) for p in ps]
+        return Perm(lambda n: list(ps), f"pairs({ps})")
+
+    @staticmethod
+    def to(dst: int, src: int) -> "Perm":
+        return Perm.pairs([(src, dst)])
+
+    def key(self, axis_size: int) -> Tuple[Tuple[int, int], ...]:
+        return tuple(sorted(self.pairs_for(axis_size)))
+
+    def inverse(self) -> "Perm":
+        fn = self._fn
+        return Perm(lambda n: [(d, s) for (s, d) in fn(n)],
+                    f"inv({self.name})")
+
+    def __repr__(self) -> str:
+        return f"Perm<{self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# Completion objects
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class Event:
+    """A completion event delivered to a completion object."""
+
+    payload: Any = None          # traced array (recv/get/am/put-target side)
+    op: str = ""                 # "send"|"recv"|"put"|"get"|"am"
+    tag: int = 0
+    perm: Optional[Perm] = None
+    remote: bool = False         # True when this is a *remote* completion
+    context: Any = None          # user context passed at post time
+
+
+class CompletionObject(HasAttrs):
+    """Base completion object.  Users may subclass and override
+    :meth:`signal` to customize completion semantics (paper: e.g. an
+    atomic-counter object waiting for all previously posted ops)."""
+
+    _ATTR_DEFAULTS: Dict[str, Any] = {}
+
+    def __init__(self, **attrs: Any) -> None:
+        self._init_attrs(attrs)
+
+    def signal(self, event: Event) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # Default-resource bookkeeping
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}@{id(self):x}"
+
+
+class Synchronizer(CompletionObject):
+    """MPI-request-like object that can wait for *multiple* completed
+    operations before becoming ready (paper §2.2)."""
+
+    _ATTR_DEFAULTS = {"threshold": 1}
+
+    def __init__(self, threshold: Optional[int] = None, **attrs: Any) -> None:
+        super().__init__(threshold=threshold, **attrs)
+        self._events: List[Event] = []
+
+    def signal(self, event: Event) -> None:
+        self._events.append(event)
+
+    @property
+    def threshold(self) -> int:
+        return self._attrs["threshold"]
+
+    def ready(self) -> bool:
+        return len(self._events) >= self.threshold
+
+    def wait(self, reset: bool = True) -> List[Event]:
+        """Return the completed events.  In trace-time LCX, ops complete
+        at ``progress()``; waiting before enough progress is a program
+        error (there is no background thread to make it ready)."""
+        if not self.ready():
+            raise RuntimeError(
+                f"Synchronizer.wait(): only {len(self._events)} of "
+                f"{self.threshold} completions arrived — call "
+                "lcx.progress() after posting"
+            )
+        events, rest = (self._events[: self.threshold],
+                        self._events[self.threshold:])
+        if reset:
+            self._events = rest
+        return events
+
+    def wait_payloads(self, reset: bool = True) -> List[Any]:
+        return [e.payload for e in self.wait(reset=reset)]
+
+
+class CompletionQueue(CompletionObject):
+    """FIFO completion queue."""
+
+    _ATTR_DEFAULTS = {"capacity": 1 << 16}
+
+    def __init__(self, capacity: Optional[int] = None, **attrs: Any) -> None:
+        super().__init__(capacity=capacity, **attrs)
+        self._q: deque = deque()
+
+    def signal(self, event: Event) -> None:
+        if len(self._q) >= self._attrs["capacity"]:
+            raise RuntimeError("CompletionQueue overflow")
+        self._q.append(event)
+
+    def pop(self) -> Optional[Event]:
+        return self._q.popleft() if self._q else None
+
+    def pop_all(self) -> List[Event]:
+        out = list(self._q)
+        self._q.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class FunctionHandler(CompletionObject):
+    """Completion object that invokes a function on each event — the
+    active-message handler, usable as *local or remote* completion for any
+    operation (paper: "LCI's active message operation supports remote
+    completion objects of any type")."""
+
+    def __init__(self, fn: Callable[[Event], Any], **attrs: Any) -> None:
+        super().__init__(**attrs)
+        self._fn = fn
+        self.results: List[Any] = []
+
+    def signal(self, event: Event) -> None:
+        self.results.append(self._fn(event))
+
+
+class CounterCompletion(CompletionObject):
+    """Example of the paper's "overload ``signal`` with an atomic counter"
+    pattern: becomes ready when N ops completed, keeps no payloads."""
+
+    _ATTR_DEFAULTS = {"target": 1}
+
+    def __init__(self, target: Optional[int] = None, **attrs: Any) -> None:
+        super().__init__(target=target, **attrs)
+        self.count = 0
+
+    def signal(self, event: Event) -> None:
+        self.count += 1
+
+    def ready(self) -> bool:
+        return self.count >= self._attrs["target"]
+
+
+# ---------------------------------------------------------------------------
+# Matching engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class PostedOp:
+    """A pending posted operation (trace-time analogue of an LCI
+    communication descriptor)."""
+
+    kind: str                    # "send" | "recv"
+    buffer: Any                  # send: traced array; recv: ShapeDtype proto
+    perm: Optional[Perm]
+    tag: int
+    comp: Optional[CompletionObject]
+    device: "Device"
+    seq: int
+    context: Any = None
+    remote_comp: Optional[CompletionObject] = None
+    op_name: str = "send"        # original op: send/put/get/am
+    allow_aggregation: bool = True
+
+
+class MatchingEngine(HasAttrs):
+    """Matches posted sends with posted recvs.
+
+    ``kind='map'`` matches on a key derived from the policy, regardless of
+    posting order (the multithreaded-throughput implementation in the
+    paper).  ``kind='queue'`` only matches in FIFO order (in-order
+    receives): a send matches the *head* recv and vice versa; a key
+    mismatch at the heads leaves both pending (they may match after
+    reordering posts — which, trace-time, means user error surfaced by
+    ``flush``).
+    """
+
+    _ATTR_DEFAULTS = {"kind": "map", "policy": "rank_tag"}
+    POLICIES = ("none", "rank_only", "tag_only", "rank_tag", "custom")
+
+    def __init__(self, kind: Optional[str] = None,
+                 policy: Optional[str] = None,
+                 key_fn: Optional[Callable[[PostedOp], Any]] = None,
+                 **attrs: Any) -> None:
+        self._init_attrs({"kind": kind, "policy": policy, **attrs})
+        if self._attrs["kind"] not in ("map", "queue"):
+            raise ValueError(f"unknown matching engine kind "
+                             f"{self._attrs['kind']!r}")
+        if self._attrs["policy"] not in self.POLICIES:
+            raise ValueError(f"unknown match policy {self._attrs['policy']!r}")
+        if self._attrs["policy"] == "custom" and key_fn is None:
+            raise ValueError("custom match policy requires key_fn")
+        self._key_fn = key_fn
+        self._pending_send: deque = deque()
+        self._pending_recv: deque = deque()
+        self.n_matched = 0
+
+    # -- key derivation ------------------------------------------------------
+    def _key(self, op: PostedOp) -> Any:
+        policy = self._attrs["policy"]
+        axis_size = op.device.axis_size
+        if policy == "none":
+            return ()
+        if policy == "rank_only":
+            return op.perm.key(axis_size) if op.perm else ()
+        if policy == "tag_only":
+            return op.tag
+        if policy == "rank_tag":
+            return ((op.perm.key(axis_size) if op.perm else ()), op.tag)
+        return self._key_fn(op)
+
+    # -- posting ---------------------------------------------------------------
+    def post(self, op: PostedOp) -> List[Tuple[PostedOp, PostedOp]]:
+        """Post an op; return newly formed (send, recv) matches."""
+        if op.kind == "send":
+            self._pending_send.append(op)
+        else:
+            self._pending_recv.append(op)
+        return self._drain()
+
+    def _drain(self) -> List[Tuple[PostedOp, PostedOp]]:
+        matches: List[Tuple[PostedOp, PostedOp]] = []
+        if self._attrs["kind"] == "queue":
+            while self._pending_send and self._pending_recv:
+                s, r = self._pending_send[0], self._pending_recv[0]
+                if self._key(s) != self._key(r):
+                    break
+                self._pending_send.popleft()
+                self._pending_recv.popleft()
+                matches.append((s, r))
+        else:  # map
+            changed = True
+            while changed:
+                changed = False
+                for s in list(self._pending_send):
+                    ks = self._key(s)
+                    for r in list(self._pending_recv):
+                        if ks == self._key(r):
+                            self._pending_send.remove(s)
+                            self._pending_recv.remove(r)
+                            matches.append((s, r))
+                            changed = True
+                            break
+                    if changed:
+                        break
+        self.n_matched += len(matches)
+        return matches
+
+    def pending(self) -> Tuple[int, int]:
+        return len(self._pending_send), len(self._pending_recv)
+
+
+# ---------------------------------------------------------------------------
+# Packet pool
+# ---------------------------------------------------------------------------
+class PacketPool(HasAttrs):
+    """Pre-registered fixed-size buffer pool.
+
+    Messages with ``nbytes <= packet_size`` travel the *eager* path and
+    are eligible for aggregation: at progress time all eager messages
+    sharing a (axis, perm) pattern are packed into one transfer.  Larger
+    messages take the *rendezvous* path (their own transfer) — mirroring
+    LCI's eager/rendezvous split.
+    """
+
+    _ATTR_DEFAULTS = {"npackets": 4096, "packet_size": 65536,
+                      "aggregate": True}
+
+    def __init__(self, npackets: Optional[int] = None,
+                 packet_size: Optional[int] = None, **attrs: Any) -> None:
+        self._init_attrs(
+            {"npackets": npackets, "packet_size": packet_size, **attrs})
+        self.stats = {"eager_msgs": 0, "rendezvous_msgs": 0,
+                      "aggregated_transfers": 0, "raw_transfers": 0}
+
+    def is_eager(self, nbytes: int) -> bool:
+        return nbytes <= self._attrs["packet_size"]
+
+
+# ---------------------------------------------------------------------------
+# Device
+# ---------------------------------------------------------------------------
+class Device(HasAttrs):
+    """The per-communicator network resource.
+
+    ``axis`` names the mesh axis this device communicates over (its
+    "NIC port" onto the ICI torus); ``axis=None`` is the loopback/sim
+    device used for single-process semantics tests.  Multiple devices on
+    the same axis model LCI's device-per-thread isolation: their pending
+    traffic is progressed independently (separate transfer schedules).
+    """
+
+    _ATTR_DEFAULTS = {
+        "axis": None,            # mesh axis name (str) or None = loopback
+        "backend": "xla",        # "xla" | "pallas" (TPU-only) | "sim"
+        "max_inflight": 64,       # max transfers materialized per progress
+        "allow_payload_metadata": True,
+        "mesh_shape": None,       # optional dict axis->size when not in ctx
+    }
+
+    def __init__(self, axis: Optional[str] = None, **attrs: Any) -> None:
+        self._init_attrs({"axis": axis, **attrs})
+        self.stats = {"posted": 0, "transfers": 0, "progressed": 0,
+                      "bytes_moved": 0}
+
+    @property
+    def axis(self) -> Optional[str]:
+        return self._attrs["axis"]
+
+    @property
+    def axis_size(self) -> int:
+        axis = self.axis
+        if axis is None:
+            return 1
+        ms = self._attrs.get("mesh_shape")
+        if ms and axis in ms:
+            return int(ms[axis])
+        # Inside shard_map the axis is bound; query its size.
+        try:
+            return int(lax.axis_size(axis))
+        except NameError:
+            raise RuntimeError(
+                f"Device axis {axis!r} is not bound — post LCX ops under "
+                "shard_map over that axis, or pass mesh_shape attr"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Memory registration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class MemoryRegion:
+    """Explicit memory registration (paper §2.2: reuse registrations to
+    reduce overhead).  In XLA the analogue of registration cost is layout/
+    donation setup; we track reuse so benchmarks can report it."""
+
+    array: Any
+    registration_id: int
+    uses: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Runtime (default resources + pending transfer ledger)
+# ---------------------------------------------------------------------------
+class Runtime:
+    """Holds default resources and the pending-transfer ledger.
+
+    The paper: "There will be a default set of resources allocated by the
+    runtime.  Users only need to explicitly manage resources when they
+    find it necessary.  Users can also disable this default resource
+    allocation."
+    """
+
+    def __init__(self, alloc_default_resources: bool = True,
+                 default_axis: Optional[str] = None) -> None:
+        self._seq = itertools.count()
+        self._reg_ids = itertools.count(1)
+        self.default_device: Optional[Device] = None
+        self.default_pool: Optional[PacketPool] = None
+        self.default_engine: Optional[MatchingEngine] = None
+        self.default_cq: Optional[CompletionQueue] = None
+        if alloc_default_resources:
+            self.default_device = Device(axis=default_axis)
+            self.default_pool = PacketPool()
+            self.default_engine = MatchingEngine()
+            self.default_cq = CompletionQueue()
+        # (send, recv) matches waiting for a progress() call.
+        self._ready: List[Tuple[PostedOp, PostedOp]] = []
+        self._rcomp_registry: Dict[int, CompletionObject] = {}
+        self._rcomp_next = itertools.count(1)
+        self._lock = threading.Lock()
+
+    # -- sequencing ---------------------------------------------------------
+    def next_seq(self) -> int:
+        return next(self._seq)
+
+    # -- remote completion registry ------------------------------------------
+    def register_rcomp(self, comp: CompletionObject) -> int:
+        rid = next(self._rcomp_next)
+        if rid >= (1 << MAX_RCOMP_BITS):
+            raise RuntimeError("remote completion handler space exhausted")
+        self._rcomp_registry[rid] = comp
+        return rid
+
+    def rcomp(self, rid: int) -> CompletionObject:
+        return self._rcomp_registry[rid]
+
+    # -- memory registration ---------------------------------------------------
+    def register_memory(self, array: Any) -> MemoryRegion:
+        return MemoryRegion(array=array, registration_id=next(self._reg_ids))
+
+    # -- match ledger -----------------------------------------------------------
+    def enqueue_matches(
+            self, matches: List[Tuple[PostedOp, PostedOp]]) -> None:
+        self._ready.extend(matches)
+
+    def take_ready(self, device: Optional[Device] = None
+                   ) -> List[Tuple[PostedOp, PostedOp]]:
+        if device is None:
+            out, self._ready = self._ready, []
+            return out
+        out = [m for m in self._ready
+               if m[0].device is device or m[1].device is device]
+        self._ready = [m for m in self._ready if m not in out]
+        return out
+
+    def pending_count(self) -> int:
+        return len(self._ready)
+
+
+_RUNTIME: Optional[Runtime] = None
+
+
+def init(alloc_default_resources: bool = True,
+         default_axis: Optional[str] = None) -> Runtime:
+    """Initialize the LCX runtime (idempotent re-init replaces it)."""
+    global _RUNTIME
+    _RUNTIME = Runtime(alloc_default_resources=alloc_default_resources,
+                       default_axis=default_axis)
+    return _RUNTIME
+
+
+def finalize(strict: bool = True) -> None:
+    global _RUNTIME
+    if _RUNTIME is not None and strict and _RUNTIME.pending_count():
+        raise RuntimeError(
+            f"lcx.finalize(): {_RUNTIME.pending_count()} matched transfers "
+            "never progressed")
+    _RUNTIME = None
+
+
+def runtime() -> Runtime:
+    global _RUNTIME
+    if _RUNTIME is None:
+        _RUNTIME = Runtime()
+    return _RUNTIME

@@ -1,0 +1,4 @@
+from .pipeline import (SyntheticLMDataset, DataLoader, batch_specs,
+                       make_batch)
+
+__all__ = ["SyntheticLMDataset", "DataLoader", "batch_specs", "make_batch"]

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (GQA) — online-softmax with VMEM blocking.
+
+Grid = (B, Hq, nq, nk); the innermost (fastest) grid dimension sweeps KV
+blocks so the f32 accumulator/m/l scratch in VMEM carries across the
+sweep for one (batch, head, q-block).  Block shapes are MXU-aligned
+multiples of 128 on the Sq/Sk dims; head_dim rides the lane dimension.
+
+Causal blocks strictly above the diagonal are skipped with ``pl.when``
+(no MXU issue on TPU; correctness-neutral in interpret mode).
+
+VMEM working set per grid point:
+    q (bq·Dk) + k (bk·Dk) + v (bk·Dv) + acc (bq·Dv f32) + s (bq·bk f32)
+with defaults bq=bk=256, Dk=Dv=128: ~0.7 MB << 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, nk: int):
+    kj = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip blocks strictly above the diagonal
+    run = (qi * bq + bq - 1 >= kj * bk) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [bq, dk]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, dk]
+        v = v_ref[0, 0]                               # [bk, dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 0)
+            cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                           # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [bq, dv]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q [B,Hq,Sq,Dk], k [B,Hkv,Sk,Dk], v [B,Hkv,Sk,Dv] -> [B,Hq,Sq,Dv]."""
+    b, hq, sq, dk = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = (dk ** -0.5) if scale is None else scale
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq //= 2
+    bk = min(block_k, sk)
+    while sk % bk:
+        bk //= 2
+    nq, nk = sq // bq, sk // bk
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dk), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dk),
+                         lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, dv),
+                         lambda b_, h, i, j: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,65 @@
+"""Pallas TPU grouped matmul for MoE expert FFN.
+
+Capacity-format GMM: xb [E, C, d] @ w [E, d, f] -> [E, C, f] with grid
+(E, C/bc, f/bf, d/bd) and an f32 VMEM accumulator across the contracting
+sweep (innermost grid dim).  MXU-aligned 128-multiples blocks; one
+expert per grid slice so expert weights stream through VMEM once per
+(ci, fj) tile pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nd: int):
+    dk = pl.program_id(3)
+
+    @pl.when(dk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(dk == nd - 1)
+    def _fin():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "block_d", "interpret"))
+def moe_gmm(xb: jax.Array, w: jax.Array, *, block_c: int = 256,
+            block_f: int = 512, block_d: int = 512,
+            interpret: bool = False) -> jax.Array:
+    """xb [E, C, d] @ w [E, d, f] -> [E, C, f]."""
+    e, c, d = xb.shape
+    f = w.shape[-1]
+    bc, bf, bd = _pick(block_c, c), _pick(block_f, f), _pick(block_d, d)
+    nd = d // bd
+    kernel = functools.partial(_gmm_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(e, c // bc, f // bf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda ei, ci, fj, dk: (ei, ci, dk)),
+            pl.BlockSpec((1, bd, bf), lambda ei, ci, fj, dk: (ei, dk, fj)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf),
+                               lambda ei, ci, fj, dk: (ei, ci, fj)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), xb.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(xb, w)

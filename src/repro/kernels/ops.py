@@ -1,0 +1,132 @@
+"""Public kernel entry points with backend selection.
+
+``backend`` resolution per call:
+- ``"pallas"``  — compiled Pallas (TPU) or interpret mode on CPU;
+- ``"xla"``     — the ref.py oracle (pure jnp, what the dry-run lowers);
+- ``None``      — auto: compiled Pallas on TPU, ``xla`` elsewhere (the
+  dry-run's CPU placeholder devices cannot compile Mosaic kernels).
+
+``model_kernels(cfg)`` builds the kernels dict consumed by
+`repro.models` (signatures match ``attn_apply``/``ssm_apply`` hooks).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash_pallas
+from .moe_gmm import moe_gmm as _gmm_pallas
+from .ring_allgather import ring_all_gather as _ring_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: Optional[str]) -> str:
+    if backend is None:
+        return "pallas" if on_tpu() else "xla"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    backend: Optional[str] = None) -> jax.Array:
+    """[B,Hq,Sq,Dk] x [B,Hkv,Sk,Dk] x [B,Hkv,Sk,Dv] -> [B,Hq,Sq,Dv]."""
+    be = _resolve(backend)
+    if be == "xla":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _flash_pallas(q, k, v, causal=causal,
+                         scale=(q.shape[-1] ** -0.5 if scale is None
+                                else scale),
+                         block_q=block_q, block_k=block_k,
+                         interpret=not on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 256,
+             backend: Optional[str] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Model-layout SSD.  x [B,S,H,P], dt [B,S,H], A [H],
+    B/C [B,S,H,N] -> (y [B,S,H,P], h_final [B,H,N,P])."""
+    be = _resolve(backend)
+    if be == "xla":
+        from repro.models.ssm import ssd_chunked
+        return ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    from .ssd_scan import ssd_scan_chunked
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    cs = min(chunk, s)
+    while s % cs:
+        cs //= 2
+    nc = s // cs
+
+    def chunked(t):  # [B,S,H,*] -> [B,H,nc,cs,*]
+        t = jnp.moveaxis(t, 2, 1)
+        return t.reshape((b, h, nc, cs) + t.shape[3:])
+
+    y, hf = ssd_scan_chunked(
+        chunked(x), chunked(dt[..., None]),
+        A.astype(jnp.float32)[:, None], chunked(Bm), chunked(Cm),
+        interpret=not on_tpu())
+    y = jnp.moveaxis(y.reshape(b, h, s, p), 1, 2)
+    return y, hf
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+def moe_gmm(xb: jax.Array, w: jax.Array, *,
+            backend: Optional[str] = None) -> jax.Array:
+    be = _resolve(backend)
+    if be == "xla":
+        return _ref.moe_gmm_ref(xb, w)
+    return _gmm_pallas(xb, w, interpret=not on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# ring all-gather (LCX put-with-signal ring)
+# ---------------------------------------------------------------------------
+def ring_all_gather(x: jax.Array, axis: str, *, axis_size: int,
+                    backend: Optional[str] = None) -> jax.Array:
+    be = _resolve(backend)
+    if be == "xla":
+        return _ref.ring_allgather_ref(x, axis)
+    return _ring_pallas(x, axis, axis_size=axis_size,
+                        interpret=not on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# model hook adapters
+# ---------------------------------------------------------------------------
+def model_kernels(cfg: Any, backend: Optional[str] = None
+                  ) -> Dict[str, Any]:
+    """Kernels dict for `repro.models` hooks.
+
+    - flash_attention hook signature: (q,k,v [B,S,H,D], causal, scale)
+      -> [B,S,Hq,Dv]   (model layout: seq-major)
+    - ssd_scan hook signature: (x,dt,A,B,C, chunk) -> (y, h_final)
+    """
+    def attn_hook(q, k, v, *, causal, scale):
+        qT = jnp.swapaxes(q, 1, 2)
+        kT = jnp.swapaxes(k, 1, 2)
+        vT = jnp.swapaxes(v, 1, 2)
+        o = flash_attention(qT, kT, vT, causal=causal, scale=scale,
+                            block_q=cfg.q_block, block_k=cfg.q_block,
+                            backend=backend)
+        return jnp.swapaxes(o, 1, 2)
+
+    def ssd_hook(x, dt, A, Bm, Cm, *, chunk):
+        return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, backend=backend)
+
+    return {"flash_attention": attn_hook, "ssd_scan": ssd_hook}

@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, print memory/cost analysis, and emit the
+roofline terms (EXPERIMENTS.md §Dry-run / §Roofline read from here).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all \
+        --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.analysis.roofline import analyze_compiled
+from repro.configs.base import SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import arch_rules, build_bundle
+from repro.models import abstract_init
+from repro.parallel.sharding import set_active_mesh, use_mesh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             verbose: bool = True,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    info = SHAPES[shape]
+    kind = info["kind"]
+    rules = arch_rules(cfg, mesh, kind)
+
+    t0 = time.perf_counter()
+    with use_mesh(mesh, rules):
+        bundle = build_bundle(cfg, mesh, kind, info["seq_len"],
+                              info["global_batch"])
+        lowered = bundle.fn.lower(*bundle.args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        params_proto, _ = abstract_init(cfg)
+        report = analyze_compiled(
+            compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+            chips=chips, cfg=cfg, params_proto=params_proto, kind=kind,
+            seq_len=info["seq_len"], global_batch=info["global_batch"])
+    rec = report.to_dict()
+    rec.update({"t_lower_s": t_lower, "t_compile_s": t_compile,
+                "kind": kind, "ok": True})
+    if verbose:
+        mem = rec["memory_analysis"]
+        print(report.summary())
+        print(f"    lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"out={mem.get('output_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"ncoll={rec['n_collectives']} "
+              f"by_kind={ {k: round(v/2**20, 1) for k, v in rec['collectives_by_kind'].items()} }MiB")
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default=None)
+    p.add_argument("--override", action="append", default=[],
+                   help="cfg override key=value (python literal)")
+    args = p.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        import ast
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    todo = []
+    if args.all:
+        for arch, shape in cells():
+            todo.append((arch, shape, False))
+            todo.append((arch, shape, True))
+    else:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = 0
+    for arch, shape, mp in todo:
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp,
+                           overrides=overrides or None)
+            n_ok += 1
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"FAIL {arch} {shape} mp={mp}: {rec['error']}")
+            traceback.print_exc()
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    print(f"dry-run complete: {n_ok}/{len(todo)} cells OK")
+    if n_ok < len(todo):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

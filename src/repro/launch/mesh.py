@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to build these meshes on CPU placeholder devices.
+
+Single pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+Axis roles (see repro.parallel.sharding.DEFAULT_RULES):
+- ``pod``   — data parallelism across pods (gradient reduction crosses
+  the inter-pod links; the compressed-allreduce path targets this axis)
+- ``data``  — data parallelism + FSDP(ZeRO-3) parameter sharding
+- ``model`` — tensor parallelism / expert parallelism / sequence
+  parallelism for long-context decode
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: Optional[int] = None) -> Optional[Mesh]:
+    """Best-effort mesh from whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    model = model or (2 if n % 2 == 0 else 1)
+    data = n // model
+    return make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants (TPU v5e) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_LINK_BW = 50e9                # B/s per link per direction
+ICI_AXIS_BW = 2 * ICI_LINK_BW     # ring uses both directions of an axis
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB per chip

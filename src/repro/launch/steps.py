@@ -1,0 +1,245 @@
+"""Step builders shared by the dry-run, the trainer, and the server:
+per (arch × shape-kind), the jitted function plus ShapeDtypeStruct input
+prototypes and NamedShardings for every argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data import batch_specs
+from repro.models import abstract_init, decode_step, init_cache, prefill
+from repro.models.model import cache_batch_axes
+from repro.optim import AdamWState, adamw_init, cosine_schedule
+from repro.parallel.sharding import (active_rules, logical_spec,
+                                     param_shardings)
+from repro.runtime.trainer import TrainConfig, make_train_step
+
+PyTree = Any
+
+
+def arch_rules(cfg: Any, mesh: Mesh, kind: str
+               ) -> Dict[str, Tuple[str, ...]]:
+    """Per-arch sharding-rule overrides.
+
+    Head-TP archs (n_kv_heads divides the model axis — MLA's 128 heads,
+    hubert's 16): restore Megatron column-parallel qkv / row-parallel wo
+    weight sharding so q/k/v come out head-sharded locally (§Perf
+    iteration 2b — avoids resharding multi-GiB q/k/v between the
+    sequence and head layouts every layer).  Chunk-mode archs keep
+    qkv/wo model-replicated (sequence parallelism carries attention).
+    """
+    rules: Dict[str, Tuple[str, ...]] = {}
+    tp = mesh.shape.get("model", 1)
+    if tp > 1 and cfg.n_kv_heads and cfg.n_kv_heads % tp == 0:
+        rules.update({"q_proj": ("model",), "kv_proj": ("model",)})
+    if kind == "decode":
+        rules.update(decode_rules(cfg, mesh))
+    return rules
+
+
+def decode_rules(cfg: Any, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    """Sharding-rule overrides for decode cells.
+
+    KV caches shard over the model axis by heads when divisible;
+    otherwise (and always for MLA's head-less latent cache) by sequence
+    — context-parallel decode, GSPMD inserts the partial-softmax
+    collectives."""
+    tp = mesh.shape.get("model", 1)
+    rules: Dict[str, Tuple[str, ...]] = {}
+    if cfg.n_experts:
+        # resident-expert decode: experts shard over the joint
+        # (data..., model) axes so the FFN weights never stream
+        from repro.models.moe import resident_plan
+        axes = resident_plan(cfg, mesh)
+        if axes is not None:
+            rules["experts"] = axes
+    if cfg.n_kv_heads and cfg.n_kv_heads % tp == 0 \
+            and not cfg.kv_lora_rank:
+        return rules
+    rules.update({"cache_seq": ("model",), "kv_heads": ()})
+    return rules
+
+
+def cache_dims(cfg: Any, caches: PyTree) -> PyTree:
+    """Logical-dims tree mirroring ``init_cache`` output."""
+    from repro.models.attention import attn_cache_dims
+    from repro.models.mla import mla_cache_dims
+    from repro.models.ssm import ssm_cache_dims
+    prefix, period, _ = cfg.scan_plan()
+
+    def dims_for(spec):
+        if spec.mixer == "attn":
+            return attn_cache_dims()
+        if spec.mixer == "mla":
+            return mla_cache_dims()
+        return ssm_cache_dims()
+
+    out: Dict[str, Any] = {}
+    for i, spec in enumerate(prefix):
+        out[f"prefix_{i}"] = dims_for(spec)
+    stack: Dict[str, Any] = {}
+    for j, spec in enumerate(period):
+        stack[f"l{j}"] = jax.tree.map(
+            lambda d: ("layers",) + d, dims_for(spec),
+            is_leaf=lambda t: isinstance(t, tuple))
+    out["stack"] = stack
+    return out
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                       # jitted function
+    args: Tuple[Any, ...]         # ShapeDtypeStruct prototypes
+    donate: Tuple[int, ...] = ()
+
+
+def _sds(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_train_bundle(cfg: Any, mesh: Mesh, seq_len: int,
+                       global_batch: int,
+                       kernels: Optional[Dict[str, Any]] = None,
+                       tcfg: Optional[TrainConfig] = None) -> StepBundle:
+    tcfg = tcfg or TrainConfig(seq_len=seq_len, global_batch=global_batch)
+    params_proto, dims = abstract_init(cfg)
+    pshard = param_shardings(dims, params_proto, mesh)
+    opt_proto = jax.eval_shape(
+        lambda p: adamw_init(p, cfg.opt_dtype), params_proto)
+    opt_shard = AdamWState(step=NamedSharding(mesh, P()),
+                           m=pshard, v=pshard)
+    bspecs = batch_specs(cfg, seq_len, global_batch)
+    bshard = {
+        k: NamedSharding(mesh, logical_spec(
+            ("batch",) + (None,) * (len(v.shape) - 1), v.shape, mesh))
+        for k, v in bspecs.items()}
+    lr_fn = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+    step = make_train_step(cfg, tcfg, lr_fn, kernels)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, opt_shard, bshard),
+        out_shardings=(pshard, opt_shard, None),
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(fn=jitted, args=(params_proto, opt_proto, bspecs),
+                      donate=(0, 1))
+
+
+def build_prefill_bundle(cfg: Any, mesh: Mesh, seq_len: int,
+                         global_batch: int,
+                         kernels: Optional[Dict[str, Any]] = None
+                         ) -> StepBundle:
+    params_proto, dims = abstract_init(cfg)
+    pshard = param_shardings(dims, params_proto, mesh)
+    tok_proto = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    tok_shard = NamedSharding(mesh, logical_spec(
+        ("batch", None), tok_proto.shape, mesh))
+
+    if cfg.family == "audio":
+        # encoder-only: "prefill" is the full forward over frame
+        # embeddings (the modality frontend stub) — no KV cache exists
+        from repro.models import apply_model
+        fe_proto = jax.ShapeDtypeStruct(
+            (global_batch, seq_len, cfg.d_model), cfg.dtype)
+        fe_shard = NamedSharding(mesh, logical_spec(
+            ("batch", "seq", None), fe_proto.shape, mesh))
+
+        def astep(params, tokens, frontend):
+            logits, _ = apply_model(cfg, params, tokens,
+                                    frontend_embeds=frontend,
+                                    kernels=kernels)
+            return logits
+
+        jitted = jax.jit(astep,
+                         in_shardings=(pshard, tok_shard, fe_shard),
+                         out_shardings=None)
+        return StepBundle(fn=jitted,
+                          args=(params_proto, tok_proto, fe_proto))
+
+    fe_len = cfg.frontend_len if cfg.family == "vlm" else 0
+    caches_proto = jax.eval_shape(
+        lambda: init_cache(cfg, global_batch, seq_len + fe_len))
+    cshard = param_shardings(cache_dims(cfg, caches_proto), caches_proto,
+                             mesh)
+    fe_proto = None
+    if fe_len:
+        fe_proto = jax.ShapeDtypeStruct(
+            (global_batch, fe_len, cfg.d_model), cfg.dtype)
+        fe_shard = NamedSharding(mesh, logical_spec(
+            ("batch", None, None), fe_proto.shape, mesh))
+
+        def vstep(params, tokens, frontend, caches):
+            return prefill(cfg, params, tokens, caches,
+                           frontend_embeds=frontend, kernels=kernels)
+
+        jitted = jax.jit(vstep,
+                         in_shardings=(pshard, tok_shard, fe_shard,
+                                       cshard),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(3,))
+        return StepBundle(fn=jitted,
+                          args=(params_proto, tok_proto, fe_proto,
+                                caches_proto), donate=(3,))
+
+    def step(params, tokens, caches):
+        return prefill(cfg, params, tokens, caches, kernels=kernels)
+
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, tok_shard, cshard),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))
+    return StepBundle(fn=jitted,
+                      args=(params_proto, tok_proto, caches_proto),
+                      donate=(2,))
+
+
+def build_decode_bundle(cfg: Any, mesh: Mesh, seq_len: int,
+                        global_batch: int,
+                        kernels: Optional[Dict[str, Any]] = None
+                        ) -> StepBundle:
+    """One decode step with a KV cache of ``seq_len`` tokens."""
+    params_proto, dims = abstract_init(cfg)
+    pshard = param_shardings(dims, params_proto, mesh)
+    caches_proto = jax.eval_shape(
+        lambda: init_cache(cfg, global_batch, seq_len))
+    cshard = param_shardings(cache_dims(cfg, caches_proto), caches_proto,
+                             mesh)
+    tok_proto = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, logical_spec(
+        ("batch", None), tok_proto.shape, mesh))
+    len_proto = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, tokens, caches, length):
+        return decode_step(cfg, params, tokens, caches, length,
+                           kernels=kernels)
+
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, tok_shard, cshard,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))
+    return StepBundle(fn=jitted,
+                      args=(params_proto, tok_proto, caches_proto,
+                            len_proto),
+                      donate=(2,))
+
+
+def build_bundle(cfg: Any, mesh: Mesh, kind: str, seq_len: int,
+                 global_batch: int,
+                 kernels: Optional[Dict[str, Any]] = None) -> StepBundle:
+    if kind == "train":
+        return build_train_bundle(cfg, mesh, seq_len, global_batch,
+                                  kernels)
+    if kind == "prefill":
+        return build_prefill_bundle(cfg, mesh, seq_len, global_batch,
+                                    kernels)
+    if kind == "decode":
+        return build_decode_bundle(cfg, mesh, seq_len, global_batch,
+                                   kernels)
+    raise ValueError(f"unknown step kind {kind!r}")

@@ -1,0 +1,7 @@
+from .model import (abstract_init, apply_model, decode_step, init_cache,
+                    init_model, loss_fn, prefill)
+from . import attention, common, mla, moe, model, ssm
+
+__all__ = ["apply_model", "decode_step", "init_cache", "init_model",
+           "loss_fn", "prefill", "attention", "common", "mla", "moe",
+           "model", "ssm"]

@@ -1,0 +1,160 @@
+"""Shared model building blocks (pure JAX, functional params).
+
+Params are nested dicts of arrays.  Every init function returns a pair
+``(params, dims)`` where ``dims`` mirrors the params tree with a tuple of
+*logical dimension names* per leaf — the sharding layer
+(`repro.parallel.sharding`) maps logical names to mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key: jax.Array, d_in: int, d_out: int, *, dims: Tuple[str, str],
+               bias: bool = False, scale: Optional[float] = None,
+               dtype: Any = jnp.float32) -> Tuple[PyTree, PyTree]:
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    d = {"w": dims}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        d["b"] = (dims[1],)
+    return p, d
+
+
+def dense(p: PyTree, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, *,
+               dtype: Any = jnp.float32) -> Tuple[PyTree, PyTree]:
+    p = {"emb": (jax.random.normal(key, (vocab, d), jnp.float32)
+                 * 0.02).astype(dtype)}
+    return p, {"emb": ("vocab", "embed")}
+
+
+def embed(p: PyTree, tokens: jax.Array, dtype: Any) -> jax.Array:
+    return jnp.take(p["emb"], tokens, axis=0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype: Any = jnp.float32) -> Tuple[PyTree, PyTree]:
+    return {"g": jnp.ones((d,), dtype)}, {"g": ("embed",)}
+
+
+def rmsnorm(p: PyTree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype: Any = jnp.float32) -> Tuple[PyTree, PyTree]:
+    return ({"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+            {"g": ("embed",), "b": ("embed",)})
+
+
+def layernorm(p: PyTree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    n = (xf - mu) * lax.rsqrt(var + eps)
+    return (n * p["g"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype: Any = jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rms" else layernorm_init(d, dtype)
+
+
+def norm(kind: str, p: PyTree, x: jax.Array, eps: float) -> jax.Array:
+    return rmsnorm(p, x, eps) if kind == "rms" else layernorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [*S] -> cos,sin [*S, head_dim//2] (fp32)."""
+    ang = positions.astype(jnp.float32)[..., None] * rope_freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; cos/sin [S, D/2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; logits [..., V] fp32-reduced."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# tree utilities for (params, dims) pairs
+# ---------------------------------------------------------------------------
+def merge(*pairs: Tuple[str, Tuple[PyTree, PyTree]]
+          ) -> Tuple[Dict[str, PyTree], Dict[str, PyTree]]:
+    """merge(("attn", (p,d)), ("mlp", (p,d))) -> ({...}, {...})"""
+    params: Dict[str, PyTree] = {}
+    dims: Dict[str, PyTree] = {}
+    for name, (p, d) in pairs:
+        params[name] = p
+        dims[name] = d
+    return params, dims
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))

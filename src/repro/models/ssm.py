@@ -1,0 +1,260 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Prefill/train uses the chunked SSD algorithm: within-chunk quadratic
+(attention-like) term + inter-chunk state recurrence carried by a
+``lax.scan`` over chunks.  All decay arithmetic is in f32; the decays are
+``exp`` of non-positive sums so they never overflow.
+
+Decode carries ``(conv_state [B, k-1, conv_ch], ssm_state [B, H, N, P])``
+and costs O(1) per token — this is why the ``long_500k`` cell is
+admissible for SSM/hybrid architectures.
+
+The Pallas kernel (`repro.kernels.ssd_scan`) implements the within-chunk
+term with MXU-aligned blocking; this module is the pure-XLA baseline and
+the oracle the kernel is validated against.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import PyTree, dense, dense_init, merge, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def ssm_init(key: jax.Array, cfg: Any) -> Tuple[PyTree, PyTree]:
+    D = cfg.d_model
+    di = cfg.ssm_d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * G * N + H
+    parts = [
+        ("in_proj", dense_init(ks[0], D, in_dim, dims=("embed", "ssm_in"),
+                               dtype=cfg.param_dtype)),
+        ("out_proj", dense_init(ks[1], di, D, dims=("ssm_inner", "embed"),
+                                scale=1.0 / math.sqrt(di),
+                                dtype=cfg.param_dtype)),
+    ]
+    params, dims = merge(*parts)
+    params["conv_w"] = (jax.random.normal(ks[2], (cfg.ssm_conv, conv_ch),
+                                          jnp.float32)
+                        * (1.0 / math.sqrt(cfg.ssm_conv))).astype(
+                            cfg.param_dtype)
+    dims["conv_w"] = ("conv_k", "ssm_conv_ch")
+    params["conv_b"] = jnp.zeros((conv_ch,), cfg.param_dtype)
+    dims["conv_b"] = ("ssm_conv_ch",)
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32))
+    dims["A_log"] = ("ssm_heads",)
+    params["D"] = jnp.ones((H,), jnp.float32)
+    dims["D"] = ("ssm_heads",)
+    params["dt_bias"] = jnp.log(
+        jnp.exp(jnp.linspace(1e-3, 0.1, H, dtype=jnp.float32)) - 1.0)
+    dims["dt_bias"] = ("ssm_heads",)
+    params["norm_g"] = jnp.ones((di,), cfg.param_dtype)
+    dims["norm_g"] = ("ssm_inner",)
+    return params, dims
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+def _split_proj(cfg: Any, zxbcdt: jax.Array):
+    di, G, N, H = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
+                   cfg.ssm_heads)
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di: 2 * di]
+    Bc = zxbcdt[..., 2 * di: 2 * di + G * N]
+    Cc = zxbcdt[..., 2 * di + G * N: 2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, jnp.concatenate([x, Bc, Cc], axis=-1), dt, (di, G, N, H)
+
+
+def _causal_conv(p: PyTree, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over S.  xbc [B, S, C]."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :]
+              * p["conv_w"][i].astype(xbc.dtype) for i in range(k))
+    return jax.nn.silu((out + p["conv_b"].astype(xbc.dtype)
+                        ).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _heads(cfg: Any, xbc: jax.Array):
+    """split conv output into x [B,S,H,P], B/C expanded to heads."""
+    di, G, N, H = (cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state,
+                   cfg.ssm_heads)
+    b, s, _ = xbc.shape
+    P = cfg.ssm_head_dim
+    x = xbc[..., :di].reshape(b, s, H, P)
+    Bm = xbc[..., di: di + G * N].reshape(b, s, G, N)
+    Cm = xbc[..., di + G * N:].reshape(b, s, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    return x, Bm, Cm
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (full sequence)
+# ---------------------------------------------------------------------------
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (negative);
+    B/C [B,S,H,N].  Returns (y [B,S,H,P], h_final [B,H,N,P]).
+
+    Three-phase SSD (the parallel decomposition from the Mamba-2 paper):
+    1. per-chunk quadratic term + chunk states — VMAPPED over chunks
+       (shardable over the sequence/model axis);
+    2. inter-chunk state recurrence — a tiny sequential scan over
+       [B,H,N,P] states only (no matmuls);
+    3. per-chunk offset contribution from the carried state — vmapped.
+    """
+    from repro.parallel.sharding import constrain
+    b, s, H, P = x.shape
+    N = Bm.shape[-1]
+    cs = min(chunk, s)
+    while s % cs:
+        cs //= 2
+    nc = s // cs
+    f32 = jnp.float32
+    cdims = ("attn_chunks", "batch", None, None, None)
+
+    def chunkify(t):
+        out = t.reshape((b, nc, cs) + t.shape[2:]).swapaxes(0, 1)
+        return constrain(out, cdims[: out.ndim])
+
+    xs, dts, Bs, Cs = map(chunkify, (x, dt, Bm, Cm))
+    if h0 is None:
+        h0 = jnp.zeros((b, H, N, P), f32)
+
+    # -- phase 1: per-chunk diag term + chunk state (parallel) ----------
+    def chunk_fwd(xc, dtc, Bc, Cc):
+        dtc = dtc.astype(f32)
+        dA = dtc * A                                # [b,cs,H] (<= 0)
+        cum = jnp.cumsum(dA, axis=1)
+        cum_last = cum[:, -1:, :]                   # [b,1,H]
+        scores = jnp.einsum("bihn,bjhn->bhij", Cc.astype(f32),
+                            Bc.astype(f32))
+        Lmat = jnp.exp(cum.transpose(0, 2, 1)[:, :, :, None]
+                       - cum.transpose(0, 2, 1)[:, :, None, :])
+        tri = jnp.tril(jnp.ones((cs, cs), bool))
+        Lmat = jnp.where(tri[None, None], Lmat, 0.0)
+        w = scores * Lmat * dtc.transpose(0, 2, 1)[:, :, None, :]
+        y_diag = jnp.einsum("bhij,bjhp->bihp", w, xc.astype(f32))
+        decay_end = jnp.exp(cum_last - cum)         # [b,cs,H]
+        Sc = jnp.einsum("bjh,bjhn,bjhp->bhnp", decay_end * dtc,
+                        Bc.astype(f32), xc.astype(f32))
+        return y_diag, Sc, cum, jnp.exp(cum_last)[:, 0, :]
+
+    y_diag, Sc, cum, gamma = jax.vmap(chunk_fwd)(xs, dts, Bs, Cs)
+    y_diag = constrain(y_diag, cdims)
+    # Sc [nc,b,H,N,P], gamma [nc,b,H]
+
+    # -- phase 2: tiny sequential state pass ----------------------------
+    def step(h, inp):
+        Sc_c, g_c = inp
+        h_next = h * g_c[..., None, None] + Sc_c
+        return h_next, h                            # emit state ENTERING c
+
+    h_final, h_in = lax.scan(step, h0, (Sc, gamma))
+
+    # -- phase 3: per-chunk offset from carried state (parallel) --------
+    def chunk_off(Cc, cum_c, h_c):
+        return jnp.einsum("bihn,bhnp->bihp", Cc.astype(f32), h_c) \
+            * jnp.exp(cum_c)[..., None]
+
+    y_off = jax.vmap(chunk_off)(Cs, cum, h_in)
+    y = (y_diag + y_off).astype(x.dtype)
+    y = constrain(y, cdims)
+    y = y.swapaxes(0, 1).reshape(b, s, H, P)
+    return y, h_final
+
+
+def ssm_apply(cfg: Any, p: PyTree, x: jax.Array, *,
+              return_cache: bool = False, kernel_fn: Any = None):
+    """Full-sequence mixer.  x [B,S,D] -> [B,S,D] (and decode cache when
+    ``return_cache``: final state + conv tail — the prefill path)."""
+    b, s, _ = x.shape
+    z, xbc_raw, dt_raw, (di, G, N, H) = _split_proj(
+        cfg, dense(p["in_proj"], x))
+    xbc = _causal_conv(p, xbc_raw)
+    xh, Bm, Cm = _heads(cfg, xbc)
+    from repro.parallel.sharding import constrain
+    xh = constrain(xh, ("batch", None, "ssm_act_heads", None))
+    Bm = constrain(Bm, ("batch", None, "ssm_act_heads", None))
+    Cm = constrain(Cm, ("batch", None, "ssm_act_heads", None))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])            # [B,S,H]
+    dt = constrain(dt, ("batch", None, "ssm_act_heads"))
+    A = -jnp.exp(p["A_log"])
+    if kernel_fn is not None:
+        y, h_final = kernel_fn(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm({"g": p["norm_g"]}, y, cfg.norm_eps)
+    out = dense(p["out_proj"], y)
+    if not return_cache:
+        return out, None
+    k = cfg.ssm_conv
+    tail = xbc_raw[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    return out, {"conv": tail.astype(cfg.dtype), "h": h_final}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def ssm_cache_init(cfg: Any, batch: int, dtype: Any = None) -> PyTree:
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch),
+                          dtype or cfg.dtype),
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def ssm_cache_dims() -> PyTree:
+    return {"conv": ("cache_batch", "conv_k", "ssm_conv_ch"),
+            "h": ("cache_batch", "ssm_heads", "state", "head")}
+
+
+def ssm_decode(cfg: Any, p: PyTree, x: jax.Array, cache: PyTree
+               ) -> Tuple[jax.Array, PyTree]:
+    """One token.  x [B,1,D] -> (y [B,1,D], new cache)."""
+    b = x.shape[0]
+    z, xbc_raw, dt_raw, (di, G, N, H) = _split_proj(
+        cfg, dense(p["in_proj"], x))
+    # conv with cached window
+    win = jnp.concatenate([cache["conv"].astype(x.dtype), xbc_raw], axis=1)
+    k = p["conv_w"].shape[0]
+    out = sum(win[:, i, :] * p["conv_w"][i].astype(x.dtype)
+              for i in range(k))
+    xbc = jax.nn.silu((out + p["conv_b"].astype(x.dtype)
+                       ).astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    xh, Bm, Cm = _heads(cfg, xbc)                   # [B,1,H,*]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0] * A)                      # [B,H]
+    f32 = jnp.float32
+    h = cache["h"] * dA[..., None, None]
+    h = h + jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0],
+                       Bm[:, 0].astype(f32), xh[:, 0].astype(f32))
+    y = jnp.einsum("bhn,bhnp->bhp", Cm[:, 0].astype(f32), h)
+    y = y.astype(x.dtype) + xh[:, 0] * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(b, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm({"g": p["norm_g"]}, y, cfg.norm_eps)
+    new_cache = {"conv": win[:, 1:, :].astype(cache["conv"].dtype), "h": h}
+    return dense(p["out_proj"], y), new_cache

@@ -1,0 +1,98 @@
+"""Sharded AdamW + cosine schedule + global-norm clipping.
+
+Moment dtype is configurable (``cfg.opt_dtype``): fp32 for fidelity,
+bf16 or int8-blockwise (via `repro.optim.compression`) to fit very large
+models — the moments inherit the parameters' shardings, so optimizer
+state is always fully sharded (ZeRO-ish by construction: params are
+FSDP-sharded by the rules in `repro.parallel.sharding`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+    def tree_flatten(self):
+        return (self.step, self.m, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState, AdamWState.tree_flatten, AdamWState.tree_unflatten)
+
+
+def adamw_init(params: PyTree, dtype: Any = jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)  # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: AdamWState, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 ) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay \
+            * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = jax.tree.unflatten(tdef, [o[0] for o in out])
+    newm = jax.tree.unflatten(tdef, [o[1] for o in out])
+    newv = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return newp, AdamWState(step=step, m=newm, v=newv)

@@ -1,0 +1,10 @@
+from .sharding import (active_mesh, constrain, dp_axes, ep_axis_name,
+                       logical_spec, param_shardings, set_active_mesh,
+                       set_rules, use_mesh, DEFAULT_RULES)
+from . import pipeline  # noqa: F401
+
+__all__ = [
+    "active_mesh", "constrain", "dp_axes", "ep_axis_name", "logical_spec",
+    "param_shardings", "set_active_mesh", "set_rules", "use_mesh",
+    "DEFAULT_RULES", "pipeline",
+]

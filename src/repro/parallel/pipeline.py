@@ -1,0 +1,77 @@
+"""Pipeline parallelism built on LCX send/recv (GPipe schedule).
+
+The paper's AMT communication pattern — many fine-grained asynchronous
+point-to-point transfers with explicit completion — is exactly the
+inter-stage traffic of a pipeline.  Each tick, every stage posts an LCX
+``put`` of its activation to the successor, calls ``progress()`` (the
+overlap point), and waits on a synchronizer.
+
+Run :func:`gpipe` under ``shard_map`` over the ``pipe`` axis; each rank
+holds the parameters of its stage only (params sharded P('pipe', ...)
+on the stacked leading dim).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
+          stage_params: Any, microbatches: jax.Array, *,
+          axis: str = "pipe", use_lcx: bool = True) -> jax.Array:
+    """GPipe forward.  ``microbatches`` [M, mb, ...] (same value on every
+    rank; only rank 0 injects).  Returns [M, mb, ...] outputs, valid on
+    the *last* rank and broadcast to all ranks at the end.
+
+    Schedule: M + n_stages - 1 ticks; rank r works on microbatch t - r at
+    tick t (bubble ticks compute on garbage and are masked out).
+    """
+    import repro.core as lcx
+
+    n = lax.axis_size(axis)
+    idx = lax.axis_index(axis)
+    M = microbatches.shape[0]
+    mb_shape = microbatches.shape[1:]
+    dev = lcx.Device(axis=axis) if use_lcx else None
+
+    def shift_next(y: jax.Array) -> jax.Array:
+        if use_lcx:
+            sync = lcx.Synchronizer(threshold=1)
+            lcx.put_x(y).perm(lcx.Perm.shift(1)).remote_comp(sync) \
+                .device(dev)()
+            lcx.progress_x().device(dev)()
+            (ev,) = sync.wait()
+            return ev.payload
+        return lax.ppermute(y, axis, [(i, (i + 1) % n) for i in range(n)])
+
+    def tick(carry, t):
+        incoming, outputs = carry
+        mb_idx = jnp.clip(t, 0, M - 1)
+        first = lax.dynamic_index_in_dim(microbatches, mb_idx, 0,
+                                         keepdims=False)
+        x_in = jnp.where(idx == 0, first, incoming)
+        y = stage_fn(stage_params, x_in)
+        out_idx = jnp.clip(t - (n - 1), 0, M - 1)
+        valid = (t >= n - 1) & (idx == n - 1)
+        cur = lax.dynamic_index_in_dim(outputs, out_idx, 0, keepdims=False)
+        outputs = lax.dynamic_update_index_in_dim(
+            outputs, jnp.where(valid, y, cur), out_idx, 0)
+        incoming = shift_next(y)
+        return (incoming, outputs), None
+
+    outputs0 = jnp.zeros((M,) + mb_shape, microbatches.dtype)
+    incoming0 = jnp.zeros(mb_shape, microbatches.dtype)
+    (_, outputs), _ = lax.scan(tick, (incoming0, outputs0),
+                               jnp.arange(M + n - 1))
+    # broadcast final outputs from the last stage to every rank
+    mask = (idx == n - 1).astype(outputs.dtype)
+    return lax.psum(outputs * mask, axis)
+
+
+def stage_slice(params_stacked: Any, axis: str = "pipe") -> Any:
+    """Inside shard_map with params in_spec P('pipe', ...), each rank
+    already holds [1, ...]; drop the leading dim."""
+    return jax.tree.map(lambda t: t[0], params_stacked)

@@ -1,0 +1,182 @@
+"""Logical-axis sharding: names → mesh axes.
+
+Every parameter/activation carries a tuple of *logical dimension names*
+(see ``models/common.py``); this module resolves them to
+``PartitionSpec``s against the active mesh using a rule table.
+
+Rules are applied left-to-right per tensor with two safety filters:
+- an axis already claimed by an earlier dim of the same tensor is
+  skipped (GSPMD forbids reusing a mesh axis within one spec);
+- an axis (or axis-tuple prefix) whose size does not divide the dim is
+  skipped (keeps every arch/mesh combination compilable — e.g. 8 KV
+  heads cannot shard 16-way, so they stay replicated).
+
+The default rules implement **FSDP(ZeRO-3) × TP/EP**:
+- ``embed`` (the contracting dim of most weights) shards over the data
+  axes → every weight is fully sharded data×model;
+- head/FFN/expert/vocab dims shard over ``model`` (TP / EP);
+- ``batch`` shards over (pod, data).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Tuple[str, ...]]
+
+# logical dim -> preferred mesh axes (tried in order, prefix-divisible)
+DEFAULT_RULES: Rules = {
+    # activations.  The model axis carries SEQUENCE parallelism for
+    # attention/SSM mixers (uniform across head counts — 14/36/64-head
+    # archs cannot head-shard a 16-way axis) and TENSOR parallelism for
+    # FFN/vocab; "attn_chunks" is the chunk-stack dim of the flash/SSD
+    # block layout.
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "attn_chunks": ("model",),
+    "vocab": ("model",),
+    "q_heads": (),
+    "ssm_act_heads": (),
+    # params: FSDP on the embed/contracting dim, TP on the feature dim.
+    # qkv/wo stay model-replicated (attention parallelism comes from the
+    # sequence axis instead — see EXPERIMENTS.md §Perf iteration 1).
+    "embed": ("data",),
+    "embed_out": (),
+    "mlp": ("model",),
+    "q_proj": (),
+    "kv_proj": (),
+    "router": (),
+    "experts": ("model",),
+    "moe_mlp": (),
+    "q_lora": ("model",),
+    "kv_lora": (),
+    "layers": (),                # scan-stacked leading dim
+    # ssm
+    "ssm_in": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_conv_ch": ("model",),
+    "ssm_heads": ("model",),
+    "conv_k": (),
+    "state": (),
+    "head": (),
+    # kv-cache
+    "cache_batch": ("pod", "data"),
+    "cache_seq": (),
+    "kv_heads": ("model",),
+}
+
+_ACTIVE: Dict[str, Any] = {"mesh": None, "rules": dict(DEFAULT_RULES)}
+
+
+def set_active_mesh(mesh: Optional[Mesh],
+                    rules: Optional[Rules] = None) -> None:
+    _ACTIVE["mesh"] = mesh
+    if rules is not None:
+        _ACTIVE["rules"] = {**DEFAULT_RULES, **rules}
+
+
+def set_rules(rules: Rules) -> None:
+    _ACTIVE["rules"] = {**DEFAULT_RULES, **rules}
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def active_rules() -> Rules:
+    return _ACTIVE["rules"]
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Rules] = None):
+    prev = dict(_ACTIVE)
+    set_active_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def ep_axis_name() -> str:
+    return "model"
+
+
+# ---------------------------------------------------------------------------
+# spec resolution
+# ---------------------------------------------------------------------------
+def _axes_for(dim: Optional[str], size: Optional[int], mesh: Mesh,
+              used: set, rules: Rules) -> Optional[Tuple[str, ...]]:
+    if dim is None:
+        return None
+    want = rules.get(dim, ())
+    chosen = []
+    prod = 1
+    for ax in want:
+        if ax not in mesh.shape or ax in used:
+            continue
+        nxt = prod * mesh.shape[ax]
+        if size is not None and size % nxt != 0:
+            break
+        chosen.append(ax)
+        prod = nxt
+    if not chosen:
+        return None
+    used.update(chosen)
+    return tuple(chosen)
+
+
+def logical_spec(dims: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Rules] = None) -> P:
+    mesh = mesh or active_mesh()
+    rules = rules or active_rules()
+    if mesh is None:
+        return P()
+    used: set = set()
+    parts = []
+    for i, d in enumerate(dims):
+        size = None if shape is None else int(shape[i])
+        axes = _axes_for(d, size, mesh, used, rules)
+        parts.append(None if axes is None
+                     else (axes[0] if len(axes) == 1 else axes))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, dims: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint from logical dims (no-op without an
+    active mesh — keeps CPU smoke tests mesh-free)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(dims, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(dims_tree: Any, params_tree: Any = None,
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[Rules] = None) -> Any:
+    """Map a dims tree (mirroring a params tree, leaves = tuples of
+    logical names) to NamedShardings.  ``params_tree`` supplies shapes
+    for divisibility checks (ShapeDtypeStructs work)."""
+    mesh = mesh or active_mesh()
+    is_leaf = lambda t: isinstance(t, tuple)  # noqa: E731
+
+    if params_tree is None:
+        return jax.tree.map(
+            lambda d: NamedSharding(mesh, logical_spec(d, None, mesh, rules)),
+            dims_tree, is_leaf=is_leaf)
+    return jax.tree.map(
+        lambda d, p: NamedSharding(
+            mesh, logical_spec(d, p.shape, mesh, rules)),
+        dims_tree, params_tree, is_leaf=is_leaf)

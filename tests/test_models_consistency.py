@@ -1,0 +1,138 @@
+"""Model-family behaviour: train/prefill/decode agreement, oracle
+agreement across MoE backends, flash vs full attention inside models."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import (apply_model, decode_step, init_cache, init_model,
+                          loss_fn, prefill)
+
+F32 = dict(dtype=jnp.float32, param_dtype=jnp.float32, q_block=8)
+
+
+def consistency(cfg, S=16, B=2, atol=5e-5):
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    caches = init_cache(cfg, B, 2 * S)
+    lg_pre, caches = prefill(cfg, params, toks, caches)
+    nxt = jnp.argmax(lg_pre[:, -1], -1)[:, None]
+    lg_dec, _ = decode_step(cfg, params, nxt, caches, jnp.int32(S))
+    toks2 = jnp.concatenate([toks, nxt], 1)
+    lg_full, _ = apply_model(cfg, params, toks2)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, -1]),
+                               np.asarray(lg_full[:, S - 1]), atol=atol)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]),
+                               np.asarray(lg_full[:, S]), atol=atol)
+
+
+def test_dense_gqa_consistency():
+    consistency(ModelConfig(name="d", n_layers=3, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab=97, **F32))
+
+
+def test_qk_norm_and_bias_consistency():
+    consistency(ModelConfig(name="d2", n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=4, d_ff=128, vocab=97,
+                            qkv_bias=True, qk_norm=True, head_dim=24,
+                            **F32))
+
+
+def test_sliding_window_consistency():
+    consistency(ModelConfig(name="sw", n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab=97,
+                            sliding_window=8, norm="layer", act="gelu",
+                            **F32))
+
+
+def test_mla_consistency():
+    consistency(ModelConfig(name="mla", n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=4, d_ff=128, vocab=97,
+                            q_lora_rank=32, kv_lora_rank=16,
+                            qk_nope_head_dim=16, qk_rope_head_dim=8,
+                            v_head_dim=16, **F32))
+
+
+def test_ssm_consistency():
+    consistency(ModelConfig(name="ssm", family="ssm", n_layers=3,
+                            d_model=64, n_heads=1, n_kv_heads=1, d_ff=0,
+                            vocab=97, ssm_state=16, ssm_head_dim=16,
+                            ssm_chunk=8, tie_embeddings=True, **F32))
+
+
+def test_hybrid_moe_consistency():
+    consistency(ModelConfig(name="hyb", family="hybrid", n_layers=8,
+                            d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                            vocab=97, attn_layer_period=4,
+                            attn_layer_offset=1, n_experts=4,
+                            n_experts_per_tok=2, moe_d_ff=96,
+                            expert_layer_period=2, expert_layer_offset=1,
+                            moe_backend="sort", capacity_factor=8.0,
+                            ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                            **F32))
+
+
+def test_moe_dense_vs_sort_oracle():
+    cfg_d = ModelConfig(name="o", family="moe", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, d_ff=64, vocab=53,
+                        n_experts=4, n_experts_per_tok=2, moe_d_ff=48,
+                        moe_backend="dense", capacity_factor=16.0, **F32)
+    cfg_s = dataclasses.replace(cfg_d, moe_backend="sort")
+    p, _ = init_model(jax.random.PRNGKey(5), cfg_d)
+    t = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0, 53)
+    l1, _ = apply_model(cfg_d, p, t)
+    l2, _ = apply_model(cfg_s, p, t)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=5e-6)
+
+
+def test_attn_impl_full_vs_chunked_vs_skip():
+    cfg = ModelConfig(name="impl", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab=97, **F32)
+    p, _ = init_model(jax.random.PRNGKey(0), cfg)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 97)
+    outs = [apply_model(cfg, p, t, impl=i)[0]
+            for i in ("full", "chunked", "chunked_causal_skip")]
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]),
+                               atol=5e-5)
+
+
+def test_vlm_frontend_prepended():
+    cfg = ModelConfig(name="vlm", family="vlm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=97,
+                      frontend="vision", frontend_len=4, **F32)
+    p, _ = init_model(jax.random.PRNGKey(0), cfg)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 97)
+    fe = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 64))
+    logits, _ = apply_model(cfg, p, t, frontend_embeds=fe)
+    assert logits.shape == (2, 12, 97)
+    loss, m = loss_fn(cfg, p, {"tokens": t, "labels": t, "frontend": fe})
+    assert jnp.isfinite(loss)
+
+
+def test_encoder_bidirectional_attention():
+    """Non-causal encoder: flipping the input changes outputs at all
+    positions (information flows both ways)."""
+    cfg = ModelConfig(name="enc", family="audio", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=64, vocab=31,
+                      causal=False, frontend="audio", **F32)
+    p, _ = init_model(jax.random.PRNGKey(0), cfg)
+    fe = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 32))
+    t = jnp.zeros((1, 8), jnp.int32)
+    l1, _ = apply_model(cfg, p, t, frontend_embeds=fe)
+    l2, _ = apply_model(cfg, p, t, frontend_embeds=fe[:, ::-1])
+    assert float(jnp.abs(l1[0, 0] - l2[0, 0]).max()) > 1e-6
+
+
+def test_mtp_loss_present():
+    cfg = ModelConfig(name="mtp", n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=53, mtp_depth=1, **F32)
+    p, _ = init_model(jax.random.PRNGKey(0), cfg)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 53)
+    loss, m = loss_fn(cfg, p, {"tokens": t, "labels": jnp.roll(t, -1, 1)})
+    assert "mtp" in m and jnp.isfinite(m["mtp"])
+    assert float(loss) > float(m["xent"]) - 1e-6   # mtp adds to the loss

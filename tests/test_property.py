@@ -1,0 +1,237 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as lcx
+from repro.core.resources import MatchingEngine, PostedOp
+from repro.models.moe import capacity, combine, dispatch
+from repro.optim import compress_int8, decompress_int8
+
+
+# ---------------------------------------------------------------------------
+# matching engine: posting order invariance (map engine)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 3)),
+                min_size=2, max_size=16),
+       st.randoms(use_true_random=False))
+def test_map_engine_order_invariant(ops, rnd):
+    """For the map engine, the multiset of matched (send_tag, recv_tag)
+    pairs is independent of posting order."""
+    lcx.init()
+    dev = lcx.Device()
+
+    def run(seq):
+        eng = MatchingEngine(kind="map", policy="tag_only")
+        matches = []
+        for i, (is_send, tag) in enumerate(seq):
+            op = PostedOp(kind="send" if is_send else "recv", buffer=None,
+                          perm=None, tag=tag, comp=None, device=dev, seq=i)
+            matches += eng.post(op)
+        return sorted((s.tag, r.tag) for s, r in matches), eng.pending()
+
+    base_matches, base_pending = run(ops)
+    shuffled = list(ops)
+    rnd.shuffle(shuffled)
+    m2, p2 = run(shuffled)
+    assert base_matches == m2
+    assert base_pending == p2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=12))
+def test_queue_engine_fifo_same_tag(tags):
+    """With a single tag stream, the queue engine matches sends and
+    recvs 1:1 in FIFO order."""
+    lcx.init()
+    dev = lcx.Device()
+    eng = MatchingEngine(kind="queue", policy="none")
+    n = 0
+    for i, t in enumerate(tags):
+        n += len(eng.post(PostedOp(kind="send", buffer=i, perm=None,
+                                   tag=t, comp=None, device=dev, seq=i)))
+    for i, t in enumerate(tags):
+        n += len(eng.post(PostedOp(kind="recv", buffer=None, perm=None,
+                                   tag=t, comp=None, device=dev,
+                                   seq=100 + i)))
+    assert n == len(tags)
+    assert eng.pending() == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# flex ops: argument order invariance
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.permutations(["b", "c", "d"]))
+def test_flex_setter_order_invariant(order):
+    from repro.core.flex import FlexOp
+
+    class f_x(FlexOp):
+        _positional = ("a",)
+        _optional = dict(b=None, c=None, d=None)
+
+        def _invoke(self):
+            return tuple(self.arg(k) for k in ("a", "b", "c", "d"))
+
+    op = f_x(0)
+    for i, name in enumerate(order):
+        getattr(op, name)(i)
+    vals = dict(zip(order, range(3)))
+    assert op() == (0, vals["b"], vals["c"], vals["d"])
+
+
+# ---------------------------------------------------------------------------
+# Perm algebra
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(-8, 8))
+def test_perm_shift_inverse(n, k):
+    p = lcx.Perm.shift(k)
+    inv = p.inverse()
+    pairs = dict(p.pairs_for(n))
+    inv_pairs = dict(inv.pairs_for(n))
+    for s, d in pairs.items():
+        assert inv_pairs[d] == s
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch/combine invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6).flatmap(
+    lambda e: st.tuples(st.just(e), st.integers(1, 24),
+                        st.integers(1, min(e, 3)))))
+def test_dispatch_combine_identity(params):
+    """With capacity >= all tokens, combine(dispatch(x)) with weights
+    summing to 1 reconstructs x exactly."""
+    E, T, k = params
+    d = 8
+    key = jax.random.PRNGKey(T * 31 + E)
+    x = jax.random.normal(key, (T, d), jnp.float32)
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (T, k), 0, E)
+    w = jnp.ones((T, k), jnp.float32) / k
+    C = T * k  # no drops possible
+    buf, info = dispatch(x, ids, w, E, C)
+    y = combine(buf, info, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(4, 64))
+def test_dispatch_capacity_drop_bound(E, T):
+    """No expert ever receives more than C tokens."""
+    k = 2
+    d = 4
+    key = jax.random.PRNGKey(T + E)
+    x = jnp.ones((T, d), jnp.float32)
+    ids = jax.random.randint(key, (T, k), 0, E)
+    w = jnp.ones((T, k)) / k
+    C = max(1, (T * k) // (2 * E))
+    buf, info = dispatch(x, ids, w, E, C)
+    # buf rows are either a token (norm d) or zero; each expert section
+    # holds at most C tokens by construction
+    per_expert = np.asarray(jnp.abs(buf).sum(-1) > 0).sum(axis=1)
+    assert (per_expert <= C).all()
+
+
+# ---------------------------------------------------------------------------
+# int8 compression error bounds
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 512), st.floats(1e-3, 1e3))
+def test_compress_roundtrip_bound(n, scale):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n,), jnp.float32) * scale
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s)
+    # quantization error bounded by half a step
+    assert float(jnp.abs(y - x).max()) <= float(s) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# capacity() is monotone and aligned
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096))
+def test_capacity_aligned(T):
+    class C:
+        n_experts_per_tok = 2
+        n_experts = 8
+        capacity_factor = 1.25
+    c = capacity(C, T)
+    assert c % 8 == 0 and c >= 8
+    assert c * C.n_experts >= T * C.n_experts_per_tok  # cap >= fair share
+
+
+# ---------------------------------------------------------------------------
+# flash attention == full attention over random shapes (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 2),                 # batch
+       st.sampled_from([(2, 1), (4, 2), (6, 2), (4, 4)]),  # (hq, hkv)
+       st.sampled_from([16, 24, 48, 64]),  # seq
+       st.sampled_from([8, 16, 32]),       # head dim
+       st.booleans())                      # causal
+def test_flash_equals_full_attention(b, heads, s, d, causal):
+    from repro.models.attention import attention_chunked, attention_full
+    hq, hkv = heads
+    key = jax.random.PRNGKey(b * 1000 + s + d)
+    q = jax.random.normal(key, (b, s, hq, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    pos = jnp.arange(s)
+    out_c = attention_chunked(q, k, v, scale=d ** -0.5, causal=causal,
+                              window=None, q_block=8, k_block=8)
+    out_f = attention_full(q, k, v, scale=d ** -0.5, causal=causal,
+                           window=None, q_pos=pos, k_pos=pos)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_f),
+                               atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked == sequential recurrence for any chunk size (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([8, 16, 32, 64]),   # seq
+       st.sampled_from([4, 8, 16, 64]),    # chunk
+       st.integers(1, 3))                  # heads
+def test_ssd_chunked_matches_sequential(s, chunk, h):
+    from repro.models.ssm import ssd_chunked
+    from repro.kernels.ref import ssd_scan_ref
+    b, p, n = 1, 8, 4
+    key = jax.random.PRNGKey(s * 7 + chunk)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, n))
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (b, s, h, n))
+    y_c, h_c = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y_r, h_r = ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# compressed_psum preserves the mean within quantization error (vmap)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(4, 64))
+def test_compressed_psum_error_bound(n_ranks, width):
+    from repro.optim import compressed_psum
+    xs = jax.random.normal(jax.random.PRNGKey(n_ranks * 100 + width),
+                           (n_ranks, width))
+
+    def body(x, e):
+        return compressed_psum(x, "dp", e)
+
+    out, _ = jax.vmap(body, axis_name="dp")(xs, jnp.zeros_like(xs))
+    ref = xs.mean(0)
+    amax = float(jnp.abs(xs).max())
+    # error <= half-step of the shared int8 grid
+    assert float(jnp.abs(out[0] - ref).max()) <= amax / 127.0 + 1e-6

@@ -1,0 +1,161 @@
+"""Trainer: convergence, checkpoint/restart, failure recovery,
+straggler detection, gradient accumulation variants."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.checkpoint import (AsyncCheckpointer, latest_step, list_steps,
+                              restore_checkpoint, save_checkpoint)
+from repro.runtime import (FailureInjector, NodeFailure, StragglerMonitor,
+                           TrainConfig, Trainer, shrink_mesh_shape)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab=211, dtype=jnp.float32,
+                param_dtype=jnp.float32, remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_loss_decreases():
+    tcfg = TrainConfig(lr=1e-3, warmup=5, total_steps=60, seq_len=32,
+                       global_batch=8, log_every=5)
+    tr = Trainer(tiny_cfg(), tcfg)
+    tr.run(40)
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_restart_resumes_exactly():
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(lr=1e-3, warmup=2, total_steps=30, seq_len=16,
+                           global_batch=4, ckpt_dir=d, ckpt_every=5)
+        tr = Trainer(tiny_cfg(), tcfg)
+        tr.run(10)
+        params_10 = jax.tree.map(np.asarray, tr.params)
+
+        tr2 = Trainer(tiny_cfg(), tcfg)
+        assert tr2.restore()
+        assert tr2.step_count == 10
+        for a, b in zip(jax.tree.leaves(params_10),
+                        jax.tree.leaves(tr2.params)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_failure_recovery_resumes_from_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(lr=1e-3, warmup=2, total_steps=40, seq_len=16,
+                           global_batch=4, ckpt_dir=d, ckpt_every=5)
+        inj = FailureInjector(fail_at=[7, 13])
+        tr = Trainer(tiny_cfg(), tcfg, failure_injector=inj)
+        out = tr.run(20)
+        assert out["failures"] == 2
+        assert out["final_step"] == 20
+        assert inj.fired == [7, 13]
+
+
+def test_failure_before_checkpoint_raises():
+    tcfg = TrainConfig(lr=1e-3, total_steps=10, seq_len=16,
+                       global_batch=4, ckpt_dir=None)
+    inj = FailureInjector(fail_at=[2])
+    tr = Trainer(tiny_cfg(), tcfg, failure_injector=inj)
+    with pytest.raises((RuntimeError, NodeFailure)):
+        tr.run(5)
+
+
+def test_grad_accum_equivalence():
+    """grad_accum=2 on batch 8 == one step on the same data."""
+    t1 = TrainConfig(lr=1e-3, warmup=0, total_steps=5, seq_len=16,
+                     global_batch=8, grad_accum=1, donate=False)
+    t2 = TrainConfig(lr=1e-3, warmup=0, total_steps=5, seq_len=16,
+                     global_batch=8, grad_accum=2, donate=False)
+    tr1, tr2 = Trainer(tiny_cfg(), t1), Trainer(tiny_cfg(), t2)
+    tr1._run_until(1)
+    tr2._run_until(1)
+    for a, b in zip(jax.tree.leaves(tr1.params),
+                    jax.tree.leaves(tr2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5)
+
+
+def test_compressed_accum_close_to_exact():
+    t2 = TrainConfig(lr=1e-3, warmup=0, total_steps=5, seq_len=16,
+                     global_batch=8, grad_accum=2, compressed_accum=True,
+                     donate=False)
+    t1 = TrainConfig(lr=1e-3, warmup=0, total_steps=5, seq_len=16,
+                     global_batch=8, grad_accum=2, donate=False)
+    tr1, tr2 = Trainer(tiny_cfg(), t1), Trainer(tiny_cfg(), t2)
+    tr1._run_until(1)
+    tr2._run_until(1)
+    ref = np.concatenate([np.asarray(x).ravel()
+                          for x in jax.tree.leaves(tr1.params)])
+    got = np.concatenate([np.asarray(x).ravel()
+                          for x in jax.tree.leaves(tr2.params)])
+    # int8 error-feedback accumulator reconstructs the sum exactly
+    # (residual carried in f32), so parameters match tightly
+    np.testing.assert_allclose(got, ref, atol=5e-5)
+
+
+# -- straggler monitor --------------------------------------------------------
+def test_straggler_monitor_flags_and_recommends_remesh():
+    mon = StragglerMonitor(threshold=2.0, patience=2)
+    assert mon.observe(1, 1.0) == "ok"
+    assert mon.observe(2, 1.05) == "ok"
+    assert mon.observe(3, 5.0) == "slow"
+    assert mon.observe(4, 5.0) == "remesh"
+    # healthy steps reset the streak
+    assert mon.observe(5, 1.0) == "ok"
+    assert mon.observe(6, 5.0) == "slow"
+    assert mon.observe(7, 1.0) == "ok"
+    assert len(mon.events) == 3
+
+
+def test_shrink_mesh_shape():
+    assert shrink_mesh_shape({"data": 16, "model": 16}, lost=1) == \
+        {"data": 8, "model": 16}
+    assert shrink_mesh_shape({"data": 16, "model": 16}, lost=3) == \
+        {"data": 4, "model": 16}
+    assert shrink_mesh_shape({"data": 1, "model": 16}, lost=2) == \
+        {"data": 1, "model": 16}
+
+
+# -- checkpoint store ---------------------------------------------------------
+def test_checkpoint_atomicity_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(4.0), "b": {"c": jnp.ones((2, 3))}}
+        for step in (1, 2, 3, 4):
+            save_checkpoint(d, step, jax.tree.map(lambda x: x * step,
+                                                  tree))
+        # a stale .tmp dir must be ignored
+        os.makedirs(os.path.join(d, "step_000000099.tmp"))
+        assert list_steps(d) == [1, 2, 3, 4]
+        assert latest_step(d) == 4
+        restored, step, _ = restore_checkpoint(d, tree)
+        assert step == 4
+        np.testing.assert_allclose(np.asarray(restored["a"]),
+                                   np.arange(4.0) * 4)
+
+        ck = AsyncCheckpointer(d, keep=2)
+        ck.save(5, tree)
+        ck.wait()
+        assert list_steps(d) == [4, 5] or list_steps(d) == [3, 4, 5][-2:]
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"a": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, {"a": jnp.zeros((5,))})
+
+
+def test_checkpoint_missing_leaf_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"a": jnp.zeros(2)})
+        with pytest.raises(KeyError):
+            restore_checkpoint(d, {"a": jnp.zeros(2), "b": jnp.zeros(2)})

@@ -1,0 +1,123 @@
+"""Logical-axis sharding rules: divisibility, axis dedup, overrides."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.parallel.sharding import (DEFAULT_RULES, dp_axes, logical_spec,
+                                     use_mesh)
+
+
+def mesh2():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def mesh3():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_batch_takes_pod_and_data():
+    spec = logical_spec(("batch", None, "embed"), (256, 4096, 896),
+                        mesh3(), DEFAULT_RULES)
+    assert spec[0] == ("pod", "data")
+    # embed -> data is already used by batch -> dropped
+    assert len(spec) < 3 or spec[2] is None
+
+
+def test_divisibility_filter():
+    # 14 q-heads cannot shard over model=16
+    spec = logical_spec(("q_heads",), (14,), mesh2(),
+                        {"q_heads": ("model",)})
+    assert spec == P()
+    spec2 = logical_spec(("q_heads",), (32,), mesh2(),
+                         {"q_heads": ("model",)})
+    assert spec2 == P("model")
+
+
+def test_axis_prefix_partial():
+    # batch 32 on (pod=2, data=16): 32 % 2 == 0, 32 % 32 == 0 -> both
+    spec = logical_spec(("batch",), (32,), mesh3(), DEFAULT_RULES)
+    assert spec == P(("pod", "data"))
+    # batch 2 -> only pod fits
+    spec2 = logical_spec(("batch",), (2,), mesh3(), DEFAULT_RULES)
+    assert spec2 == P("pod")
+    # batch 3 -> nothing fits
+    spec3 = logical_spec(("batch",), (3,), mesh3(), DEFAULT_RULES)
+    assert spec3 == P()
+
+
+def test_param_fsdp_times_tp():
+    # w [embed, mlp]: data x model fully sharded
+    spec = logical_spec(("embed", "mlp"), (4096, 16384), mesh2(),
+                        DEFAULT_RULES)
+    assert spec == P("data", "model")
+
+
+def test_expert_stack_sharding():
+    spec = logical_spec(("experts", "embed", "moe_mlp"),
+                        (256, 7168, 2048), mesh2(), DEFAULT_RULES)
+    assert spec == P("model", "data")
+
+
+def test_no_axis_reuse_within_tensor():
+    spec = logical_spec(("seq", "vocab"), (4096, 151936), mesh2(),
+                        DEFAULT_RULES)
+    # both want model; seq wins (left-to-right), vocab drops
+    assert spec == P("model")
+
+
+def test_rule_override_via_use_mesh():
+    m = mesh2()
+    with use_mesh(None):
+        pass
+    from repro.parallel.sharding import active_rules, set_active_mesh
+    with use_mesh(m, {"cache_seq": ("model",)}):
+        assert active_rules()["cache_seq"] == ("model",)
+        spec = logical_spec(("cache_batch", "cache_seq"), (32, 32768), m)
+        assert spec == P("data", "model")
+        # batch 8 cannot shard over data=16 -> dropped by divisibility
+        spec8 = logical_spec(("cache_batch", "cache_seq"), (8, 32768), m)
+        assert spec8 == P(None, "model")
+    # restored afterwards
+    assert active_rules().get("cache_seq") == ()
+
+
+def test_dp_axes():
+    assert dp_axes(mesh3()) == ("pod", "data")
+    assert dp_axes(mesh2()) == ("data",)
+
+
+def test_no_mesh_is_noop():
+    import jax.numpy as jnp
+    from repro.parallel.sharding import constrain, set_active_mesh
+    set_active_mesh(None)
+    x = jnp.ones((4, 4))
+    assert constrain(x, ("batch", None)) is x
+
+
+def test_pick_chunks_tp_aligned():
+    from repro.models.attention import _pick_chunks
+    # VLM seq 4096+576: must find a 16-multiple chunk count
+    nq, bq = _pick_chunks(4672, 256, 16)
+    assert nq % 16 == 0 and nq * bq == 4672
+    # prefill 32768+576: falls to the 64-chunk divisor
+    nq2, bq2 = _pick_chunks(33344, 256, 16)
+    assert nq2 % 16 == 0 and nq2 * bq2 == 33344 and bq2 >= 64
+    # power of two: exact
+    assert _pick_chunks(4096, 256, 16) == (16, 256)
+    # no tp-aligned divisor (prime seq): gcd fallback
+    nq3, bq3 = _pick_chunks(97, 16, 16)
+    assert nq3 * bq3 == 97
+
+
+def test_resident_plan_budget():
+    from jax.sharding import AbstractMesh
+    from repro.configs.base import get_config
+    from repro.models.moe import resident_plan
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    # dsv3: 256 experts / 256 chips, small experts -> resident
+    assert set(resident_plan(get_config("deepseek-v3-671b"), mesh)) == \
+        {"data", "model"}
+    # jamba: 16 fat experts -> over budget -> stream
+    assert resident_plan(get_config("jamba-1.5-large-398b"), mesh) is None
+    # dense arch: no experts
+    assert resident_plan(get_config("qwen2-0.5b"), mesh) is None
