@@ -1,0 +1,149 @@
+"""AMT task-executor throughput / overhead benchmark.
+
+Measures the scheduling cost the executor adds on top of raw Python
+calls, across graph shapes that stress different parts of the worker
+loop:
+
+- ``chain``   — N serially dependent tasks (dependency bookkeeping);
+- ``fanout``  — 1 source, N independent leaves (ready-heap churn);
+- ``diamond`` — D layers of W-wide fan-out/fan-in (mixed);
+- ``comm``    — N communication tasks, each posting a loopback LCX put
+  and suspending until the completion queue retires it (the
+  progress-interleaved path the GPipe schedule exercises).
+
+Reported per shape: wall time, tasks/s, and per-task overhead versus a
+bare-Python-loop baseline running the same bodies.  ``--smoke`` runs a
+tiny configuration (CI sanity); ``--csv`` dumps rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+import repro.core as lcx
+from repro.amt import Executor
+
+
+def _noop_body(ctx):
+    return 0
+
+
+def bench_chain(n: int) -> Dict[str, float]:
+    lcx.init()
+    ex = Executor(name="chain")
+    prev = None
+    t0 = time.perf_counter()
+    for i in range(n):
+        prev = ex.spawn(_noop_body, deps=(prev,) if prev else ())
+    ex.run()
+    dt = time.perf_counter() - t0
+    return {"shape": "chain", "tasks": n, "seconds": dt}
+
+
+def bench_fanout(n: int) -> Dict[str, float]:
+    lcx.init()
+    ex = Executor(name="fanout")
+    t0 = time.perf_counter()
+    src = ex.spawn(_noop_body)
+    for i in range(n - 1):
+        ex.spawn(_noop_body, deps=(src,), priority=i % 7)
+    ex.run()
+    dt = time.perf_counter() - t0
+    return {"shape": "fanout", "tasks": n, "seconds": dt}
+
+
+def bench_diamond(layers: int, width: int) -> Dict[str, float]:
+    lcx.init()
+    ex = Executor(name="diamond")
+    t0 = time.perf_counter()
+    top = ex.spawn(_noop_body)
+    for _ in range(layers):
+        mids = [ex.spawn(_noop_body, deps=(top,)) for _ in range(width)]
+        top = ex.spawn(_noop_body, deps=tuple(mids))
+    ex.run()
+    dt = time.perf_counter() - t0
+    n = 1 + layers * (width + 1)
+    return {"shape": "diamond", "tasks": n, "seconds": dt}
+
+
+def bench_comm(n: int, progress_every: int = 8) -> Dict[str, float]:
+    """Loopback puts retired through the executor's completion queue."""
+    lcx.init()
+    ex = Executor(progress_every=progress_every, name="comm")
+    x = jnp.float32(1.0)
+
+    def maker(i):
+        def fn(ctx):
+            ctx.put(x, None, tag=i % (1 << 15))
+            return ctx.suspend(lambda ev: 0)
+        return fn
+
+    t0 = time.perf_counter()
+    for i in range(n):
+        ex.spawn(maker(i))
+    stats = ex.run()
+    dt = time.perf_counter() - t0
+    return {"shape": "comm", "tasks": n, "seconds": dt,
+            "progress_calls": stats["progress_calls"],
+            "events_retired": stats["events_retired"]}
+
+
+def bench_baseline(n: int) -> Dict[str, float]:
+    """The same no-op bodies as a bare Python loop (no scheduler)."""
+    t0 = time.perf_counter()
+    acc = 0
+    for _ in range(n):
+        acc += _noop_body(None)
+    dt = time.perf_counter() - t0
+    return {"shape": "baseline", "tasks": n, "seconds": dt}
+
+
+def main() -> List[Dict[str, float]]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI sanity")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override task count")
+    ap.add_argument("--csv", type=str, default=None)
+    args = ap.parse_args()
+
+    n = args.n if args.n is not None else (200 if args.smoke else 20000)
+    if n < 1:
+        ap.error("--n must be >= 1")
+    layers, width = (4, 8) if args.smoke else (40, 32)
+
+    rows = [
+        bench_baseline(n),
+        bench_chain(n),
+        bench_fanout(n),
+        bench_diamond(layers, width),
+        bench_comm(200 if args.smoke else 2000),
+    ]
+    base_per_task = rows[0]["seconds"] / rows[0]["tasks"]
+    print(f"{'shape':10s} {'tasks':>8s} {'ms total':>10s} "
+          f"{'tasks/s':>12s} {'us/task':>9s} {'overhead us':>12s}")
+    for r in rows:
+        per = r["seconds"] / r["tasks"]
+        r["tasks_per_s"] = r["tasks"] / max(r["seconds"], 1e-12)
+        r["overhead_us"] = (per - base_per_task) * 1e6
+        print(f"{r['shape']:10s} {r['tasks']:8d} "
+              f"{r['seconds'] * 1e3:10.2f} {r['tasks_per_s']:12.0f} "
+              f"{per * 1e6:9.2f} {r['overhead_us']:12.2f}")
+
+    if args.csv:
+        import csv
+        keys = sorted({k for r in rows for k in r})
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+    print("AMT_TASKBENCH_JSON=" + json.dumps(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

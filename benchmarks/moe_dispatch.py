@@ -26,9 +26,9 @@ def _run_inproc(n_tokens: int, a2a_backend: str) -> Dict[str, float]:
     from repro.configs.base import ModelConfig
     from repro.models.moe import moe_init, moe_apply
     from repro.parallel.sharding import use_mesh, param_shardings
+    from repro.compat import make_mesh
 
-    mesh = jax.make_mesh((1, N_RANKS), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, N_RANKS), ("data", "model"))
     cfg = ModelConfig(name="bench", family="moe", n_layers=1, d_model=128,
                       n_heads=2, n_kv_heads=2, d_ff=256, vocab=64,
                       n_experts=8, n_experts_per_tok=2, moe_d_ff=256,

@@ -110,12 +110,12 @@ def _run_design_inproc(design: str, lanes: int) -> Dict[str, float]:
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
 
-    mesh = jax.make_mesh((N_RANKS,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N_RANKS,), ("x",))
     body = _pingpong_body(design, lanes)
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("x", None),
-                               out_specs=P("x", None), check_vma=False))
+    fn = jax.jit(shard_map(body, mesh, in_specs=P("x", None),
+                           out_specs=P("x", None)))
     xs = jnp.arange(N_RANKS * MSG_WORDS,
                     dtype=jnp.float32).reshape(N_RANKS, MSG_WORDS)
     compiled = fn.lower(xs).compile()

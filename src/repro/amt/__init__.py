@@ -1,0 +1,29 @@
+"""AMT — an asynchronous many-task executor layered on LCX.
+
+The paper argues that a lightweight communication interface earns its
+keep when an asynchronous many-task runtime drives it.  This package is
+that runtime for the repo: :class:`TaskGraph` DAGs of fine-grained
+tasks, a completion-driven :class:`Executor` whose worker loop
+interleaves task execution with explicit ``lcx.progress()`` and retires
+communication-suspended tasks from completion objects (never blocking
+waits), and :class:`RemoteSpawner` for shipping named tasks to mesh
+neighbours over active messages.
+
+Clients in-repo: the GPipe schedule
+(:func:`repro.parallel.pipeline.gpipe`) runs as a task graph whose
+inter-stage edges are LCX puts, and the serving engine
+(:class:`repro.serving.ServingEngine`) admits prefill/decode work
+through an executor.  See ``docs/amt.md`` for the executor ↔
+completion-object contract.
+"""
+from .task import Task, TaskGraph, TaskState
+from .executor import Executor, PENDING, TaskContext
+from .remote import (RemoteSpawner, clear_task_handlers,
+                     register_task_handler, task_handler)
+
+__all__ = [
+    "Task", "TaskGraph", "TaskState",
+    "Executor", "PENDING", "TaskContext",
+    "RemoteSpawner", "register_task_handler", "task_handler",
+    "clear_task_handlers",
+]

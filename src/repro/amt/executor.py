@@ -1,0 +1,308 @@
+"""Completion-driven task executor on top of LCX.
+
+This is the runtime the paper's interface was designed *for*: an
+asynchronous many-task scheduler whose worker loop interleaves
+ready-task execution with explicit ``lcx.progress()`` calls, and which
+retires communication-blocked tasks from **completion objects** — a
+:class:`~repro.core.resources.CompletionQueue` drained after each
+progress call, plus :class:`~repro.core.resources.FunctionHandler`
+callbacks fired *by* progress — never from blocking/polling waits.
+
+Execution protocol
+------------------
+A task body receives a :class:`TaskContext`.  To communicate it posts
+LCX operations through the context (``ctx.put`` / ``ctx.am`` /
+``ctx.send`` / ``ctx.recv``), which route the operation's completion to
+the executor's retirement queue with the task recorded as the event
+context.  A body that must wait for arrivals returns
+``ctx.suspend(k, n_events=...)``: the task parks as BLOCKED and the
+executor calls ``k`` with the event(s) once progress has signalled them,
+using ``k``'s return value as the task result.
+
+Backpressure
+------------
+Admission from the ready heap is gated on the depth of the pending
+transfer ledger: when more matched-but-unprogressed transfers are
+outstanding than the packet pool has packets (or ``max_inflight``), the
+executor drives progress instead of admitting more work — the AMT
+analogue of LCI's packet-pool exhaustion pushing back on senders.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import repro.core as lcx
+
+from .task import Task, TaskGraph, TaskState
+
+
+class _Pending:
+    """Sentinel returned by :meth:`TaskContext.suspend`."""
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<pending>"
+
+
+PENDING = _Pending()
+
+
+class TaskContext:
+    """Handed to every task body; the task's view of the executor."""
+
+    def __init__(self, executor: "Executor", task: Task) -> None:
+        self.executor = executor
+        self.task = task
+
+    # -- communication posting ----------------------------------------------
+    def put(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
+            tag: int = 0, device: Optional[lcx.Device] = None,
+            allow_aggregation: bool = True) -> None:
+        """Post a one-sided put whose *remote* completion retires through
+        the executor (the receiving side's suspended task resumes)."""
+        dev = device or self.executor.device
+        lcx.put_x(buffer).perm(perm).tag(tag) \
+            .remote_comp(self.executor.cq).ctx(self.task) \
+            .device(dev).allow_aggregation(allow_aggregation)()
+        self.executor._note_post()
+
+    def am(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
+           tag: int = 0, remote_comp: Optional[Any] = None,
+           context: Any = None,
+           device: Optional[lcx.Device] = None) -> None:
+        """Post an active message.  Defaults the remote completion to the
+        executor's retirement queue with this task as context."""
+        dev = device or self.executor.device
+        lcx.am_x(buffer).perm(perm).tag(tag) \
+            .remote_comp(remote_comp or self.executor.cq) \
+            .ctx(self.task if context is None else context).device(dev)()
+        self.executor._note_post()
+
+    def send(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
+             tag: int = 0, device: Optional[lcx.Device] = None) -> None:
+        dev = device or self.executor.device
+        lcx.send_x(buffer).perm(perm).tag(tag).comp(self.executor.cq) \
+            .ctx(self.task).device(dev)()
+        self.executor._note_post()
+
+    def recv(self, like: Any, perm: Optional[lcx.Perm] = None, *,
+             tag: int = 0, device: Optional[lcx.Device] = None) -> None:
+        dev = device or self.executor.device
+        lcx.recv_x(like).perm(perm).tag(tag).comp(self.executor.cq) \
+            .ctx(self.task).device(dev)()
+        self.executor._note_post()
+
+    # -- suspension ----------------------------------------------------------
+    def suspend(self, k: Optional[Callable[..., Any]] = None,
+                n_events: int = 1) -> _Pending:
+        """Park this task until ``n_events`` completion events with this
+        task as context have been retired; then run ``k(event)`` (or
+        ``k(events)`` for n_events > 1) as the task result."""
+        self.task._suspension = {"k": k, "need": int(n_events),
+                                 "events": []}
+        return PENDING
+
+    # -- dynamic graph growth -------------------------------------------------
+    def spawn(self, fn: Callable[..., Any], *, deps: Tuple[Task, ...] = (),
+              priority: int = 0, name: Optional[str] = None) -> Task:
+        return self.executor.spawn(fn, deps=deps, priority=priority,
+                                   name=name)
+
+
+class Executor:
+    """Single-threaded (per-rank) completion-driven task scheduler.
+
+    One executor per SPMD rank trace.  Tasks run in priority order
+    (higher first, FIFO within a priority); communication-suspended
+    tasks retire from the executor's CompletionQueue after each
+    ``lcx.progress()``; watched completion objects (Synchronizer /
+    CounterCompletion / custom ``signal`` overloads) resolve promise
+    tasks the same way.
+    """
+
+    def __init__(self, device: Optional[lcx.Device] = None,
+                 pool: Optional[lcx.PacketPool] = None,
+                 graph: Optional[TaskGraph] = None, *,
+                 progress_every: int = 8,
+                 max_inflight: Optional[int] = None,
+                 cq: Optional[lcx.CompletionQueue] = None,
+                 name: str = "amt") -> None:
+        self.name = name
+        self.device = device if device is not None else lcx.Device()
+        self.pool = pool
+        self.graph = graph or TaskGraph()
+        self.cq = cq if cq is not None else lcx.CompletionQueue()
+        self.progress_every = max(1, progress_every)
+        if max_inflight is None:
+            if pool is not None:
+                max_inflight = pool.get_attr_npackets()
+            else:
+                max_inflight = self.device.get_attr_max_inflight()
+        self.max_inflight = max_inflight
+        self.stats: Dict[str, int] = {
+            "tasks_run": 0, "tasks_resumed": 0, "progress_calls": 0,
+            "events_retired": 0, "backpressure_stalls": 0,
+            "watch_fires": 0, "cycles": 0,
+        }
+        self._heap: List[Tuple[int, int, Task]] = []
+        self._tie = itertools.count()
+        self._posted_since_progress = 0
+        # (comp, k, promise) triples checked after each progress call
+        self._watches: List[Tuple[Any, Callable[[Any], Any], Task]] = []
+        self._activity = 0
+
+    # -- submission -----------------------------------------------------------
+    def spawn(self, fn: Callable[..., Any], *,
+              deps: Tuple[Task, ...] = (), priority: int = 0,
+              name: Optional[str] = None) -> Task:
+        task = self.graph.add(fn, deps=deps, priority=priority, name=name)
+        if task.n_waiting == 0:
+            task.state = TaskState.READY
+            self._push(task)
+        self._activity += 1
+        return task
+
+    def submit(self, task: Task) -> Task:
+        self.graph.add_task(task)
+        if task.n_waiting == 0 and task.fn is not None:
+            task.state = TaskState.READY
+            self._push(task)
+        self._activity += 1
+        return task
+
+    def promise(self, name: str = "promise") -> Task:
+        """A task with no body, resolved externally (reply arrival,
+        watched completion object, ...)."""
+        task = self.graph.add(None, name=name)
+        task.state = TaskState.BLOCKED
+        return task
+
+    def resolve_promise(self, task: Task, value: Any = None) -> None:
+        self._retire(task, value)
+
+    def watch(self, comp: Any,
+              k: Optional[Callable[[Any], Any]] = None,
+              name: str = "watch") -> Task:
+        """Resolve a promise when ``comp.ready()`` becomes true (checked
+        after every progress call).  ``k(comp)`` supplies the value."""
+        promise = self.promise(name=name)
+        self._watches.append((comp, k or (lambda c: c), promise))
+        return promise
+
+    # -- worker loop -----------------------------------------------------------
+    def run(self, max_cycles: int = 100000) -> Dict[str, int]:
+        """Drain the graph: execute ready tasks, interleave progress,
+        retire completions.  Raises on deadlock (blocked tasks that no
+        amount of progress can unblock)."""
+        for t in self.graph.newly_ready():
+            self._push(t)
+        for _ in range(max_cycles):
+            self.stats["cycles"] += 1
+            before = self._activity
+            while self._heap:
+                if lcx.runtime().pending_count() >= self.max_inflight:
+                    self.stats["backpressure_stalls"] += 1
+                    self._progress_and_retire()
+                task = self._pop()
+                if task is None:
+                    break
+                self._execute(task)
+                if self._posted_since_progress >= self.progress_every:
+                    self._progress_and_retire()
+            # Flush communication even when no task is runnable — an
+            # arriving message may spawn work (active-message handlers).
+            self._progress_and_retire()
+            if not self.graph.unfinished():
+                break
+            if self._activity == before:
+                stuck = [t for t in self.graph.tasks.values()
+                         if t.state in (TaskState.PENDING, TaskState.READY,
+                                        TaskState.BLOCKED)]
+                raise RuntimeError(
+                    f"executor {self.name!r} deadlocked with "
+                    f"{self.graph.unfinished()} unfinished tasks: "
+                    f"{stuck[:8]}")
+        else:
+            raise RuntimeError(f"executor {self.name!r}: max_cycles "
+                               "exceeded")
+        return dict(self.stats)
+
+    # -- internals -------------------------------------------------------------
+    def _note_post(self) -> None:
+        self._posted_since_progress += 1
+
+    def _push(self, task: Task) -> None:
+        heapq.heappush(self._heap, (-task.priority, next(self._tie), task))
+
+    def _pop(self) -> Optional[Task]:
+        while self._heap:
+            _, _, task = heapq.heappop(self._heap)
+            if task.state is TaskState.READY:
+                return task
+        return None
+
+    def _execute(self, task: Task) -> None:
+        task.state = TaskState.RUNNING
+        ctx = TaskContext(self, task)
+        try:
+            out = task.fn(ctx)
+        except BaseException as e:
+            self.graph.fail(task, e)
+            raise
+        self.stats["tasks_run"] += 1
+        self._activity += 1
+        if out is PENDING:
+            task.state = TaskState.BLOCKED
+        else:
+            self._retire(task, out)
+
+    def _retire(self, task: Task, result: Any) -> None:
+        task.result = result
+        for k in task.continuations:
+            k(result)
+        for ready in self.graph.retire(task):
+            ready.state = TaskState.READY
+            self._push(ready)
+        self._activity += 1
+
+    def _progress_and_retire(self) -> int:
+        op = lcx.progress_x()
+        if self.pool is not None:
+            op = op.pool(self.pool)
+        op()
+        self.stats["progress_calls"] += 1
+        self._posted_since_progress = 0
+        n = 0
+        # Retire communication-suspended tasks from the completion queue.
+        for ev in self.cq.pop_all():
+            n += 1
+            self.stats["events_retired"] += 1
+            task = ev.context
+            if not isinstance(task, Task):
+                continue  # foreign traffic on a shared queue
+            susp = task._suspension
+            if susp is None:
+                continue
+            susp["events"].append(ev)
+            if len(susp["events"]) < susp["need"]:
+                continue
+            task._suspension = None
+            k = susp["k"]
+            events = susp["events"]
+            value = None
+            if k is not None:
+                value = k(events[0]) if susp["need"] == 1 else k(events)
+            self.stats["tasks_resumed"] += 1
+            self._retire(task, value)
+        # Resolve watched completion objects (threshold counters etc.).
+        still = []
+        for comp, k, promise in self._watches:
+            if getattr(comp, "ready", lambda: False)():
+                self.stats["watch_fires"] += 1
+                n += 1
+                self.resolve_promise(promise, k(comp))
+            else:
+                still.append((comp, k, promise))
+        self._watches = still
+        return n

@@ -1,0 +1,107 @@
+"""Remote task spawning over LCX active messages.
+
+A task handler is registered *by name* on every rank (SPMD: the same
+registration code runs everywhere, so the table is identical — the
+trace-time analogue of LCI's remote-completion-handler registry).
+:meth:`RemoteSpawner.spawn` posts an ``am_x`` carrying the argument
+payload toward the peer selected by ``perm``; at the destination the
+message's :class:`~repro.core.resources.FunctionHandler` remote
+completion fires during ``progress()`` and enqueues an *execution task*
+on the destination executor.  If a reply is requested, that execution
+task posts a second active message back along the inverse permutation,
+resolving the promise the spawner returned.
+
+Because ranks run in lockstep, reply-correlation ids advance
+identically on every rank; the id in the (locally traced) event context
+therefore names the same logical spawn on sender and receiver.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, Optional
+
+import repro.core as lcx
+
+from .executor import Executor
+from .task import Task
+
+_HANDLERS: Dict[str, Callable[[Any], Any]] = {}
+
+
+def register_task_handler(name: str, fn: Callable[[Any], Any]) -> str:
+    """Register ``fn`` under ``name`` (must run on every rank)."""
+    _HANDLERS[name] = fn
+    return name
+
+
+def task_handler(name: Optional[str] = None):
+    """Decorator form of :func:`register_task_handler`."""
+
+    def deco(fn: Callable[[Any], Any]) -> Callable[[Any], Any]:
+        register_task_handler(name or fn.__name__, fn)
+        return fn
+
+    return deco
+
+
+def clear_task_handlers() -> None:
+    _HANDLERS.clear()
+
+
+class RemoteSpawner:
+    """Remote-spawn endpoint bound to one executor (one per rank)."""
+
+    def __init__(self, executor: Executor,
+                 device: Optional[lcx.Device] = None) -> None:
+        self.executor = executor
+        self.device = device or executor.device
+        self._fh = lcx.FunctionHandler(self._deliver)
+        self._reply_fh = lcx.FunctionHandler(self._deliver_reply)
+        self._reply_ids = itertools.count(1)
+        self._pending_replies: Dict[int, Task] = {}
+
+    # -- sender side -----------------------------------------------------------
+    def spawn(self, name: str, payload: Any, perm: lcx.Perm, *,
+              reply: bool = True, priority: int = 0,
+              tag: int = 0) -> Optional[Task]:
+        """Spawn handler ``name`` on the peer(s) named by ``perm``,
+        shipping ``payload``.  Returns a promise task that resolves with
+        the peer's result (or None when ``reply=False``)."""
+        if name not in _HANDLERS:
+            raise KeyError(f"no task handler registered as {name!r}; "
+                           f"known: {sorted(_HANDLERS)}")
+        promise = None
+        reply_id = 0
+        if reply:
+            reply_id = next(self._reply_ids)
+            promise = self.executor.promise(name=f"reply:{name}:{reply_id}")
+            self._pending_replies[reply_id] = promise
+        lcx.am_x(payload).perm(perm).tag(tag).remote_comp(self._fh) \
+            .ctx({"handler": name, "reply_id": reply_id, "perm": perm,
+                  "priority": priority}).device(self.device)()
+        self.executor._note_post()
+        return promise
+
+    # -- receiver side (both run during lcx.progress) ---------------------------
+    def _deliver(self, ev: lcx.Event) -> Task:
+        info = ev.context
+        fn = _HANDLERS[info["handler"]]
+
+        def run_remote(ctx: Any, _payload: Any = ev.payload,
+                       _info: Dict[str, Any] = info) -> Any:
+            result = fn(_payload)
+            if _info["reply_id"]:
+                lcx.am_x(result).perm(_info["perm"].inverse()) \
+                    .remote_comp(self._reply_fh) \
+                    .ctx({"reply_id": _info["reply_id"]}) \
+                    .device(self.device)()
+                ctx.executor._note_post()
+            return result
+
+        return self.executor.spawn(
+            run_remote, priority=info.get("priority", 0),
+            name=f"remote:{info['handler']}")
+
+    def _deliver_reply(self, ev: lcx.Event) -> None:
+        promise = self._pending_replies.pop(ev.context["reply_id"])
+        self.executor.resolve_promise(promise, ev.payload)

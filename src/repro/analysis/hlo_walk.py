@@ -38,7 +38,11 @@ _COLL_KIND_RE = re.compile(
     r"collective-permute)(?:-start)?\(")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_DOT_OPERANDS_RE = re.compile(r"\bdot\(\s*%([\w.\-]+),\s*%([\w.\-]+)\)")
+# operands print bare (`dot(%a, %b)`) on new XLA, typed
+# (`dot(f32[128,128]{1,0} %a, ...)`) on older releases
+_OPERAND = r"(?:[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?\s+)?%([\w.\-]+)"
+_DOT_OPERANDS_RE = re.compile(
+    r"\bdot\(\s*" + _OPERAND + r",\s*" + _OPERAND + r"\s*\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 

@@ -15,6 +15,17 @@ Typical use (under ``shard_map`` over the device's axis)::
     lcx.put_x(x).perm(lcx.Perm.shift(1)).remote_comp(sync).device(dev)()
     lcx.progress()
     (ev,) = sync.wait()            # ev.payload == neighbour's x
+
+The AMT client this interface was designed for lives in ``repro.amt``:
+a task-graph executor whose worker loop interleaves ready-task
+execution with ``progress()`` and retires communication-suspended tasks
+from completion objects — the executor's CompletionQueue is drained
+after every progress call, FunctionHandlers fired by active messages
+enqueue handler tasks, and any completion object with ``ready()``
+(Synchronizer, CounterCompletion, custom ``signal`` overloads) can be
+watched to resolve promise tasks.  See ``docs/amt.md`` for the
+executor ↔ completion-object contract; ``repro.parallel.pipeline`` and
+``repro.serving`` are in-repo clients.
 """
 from .flex import FlexOp, REQUIRED, plain
 from .attr import (get_global_attr, reset_global_attrs, set_global_attr)

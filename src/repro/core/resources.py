@@ -401,8 +401,9 @@ class Device(HasAttrs):
         if ms and axis in ms:
             return int(ms[axis])
         # Inside shard_map the axis is bound; query its size.
+        from repro.compat import axis_size
         try:
-            return int(lax.axis_size(axis))
+            return axis_size(axis)
         except NameError:
             raise RuntimeError(
                 f"Device axis {axis!r} is not bound — post LCX ops under "

@@ -195,7 +195,8 @@ def _moe_ep_shard(cfg: Any, p: PyTree, x_flat: jax.Array, ep_axis: str,
     """Body under shard_map: x_flat [T_loc, d] tokens of THIS rank;
     expert weights in ``p`` are the full stacks (sliced locally)."""
     import repro.core as lcx
-    ep = lax.axis_size(ep_axis)
+    from repro.compat import axis_size
+    ep = axis_size(ep_axis)
     rank = lax.axis_index(ep_axis)
     E = cfg.n_experts
     E_loc = E // ep

@@ -46,7 +46,8 @@ def compressed_psum(x: jax.Array, axis: str,
     Returns (mean-reduced value, new error-feedback residual).  Must run
     under shard_map/vmap with ``axis`` bound.
     """
-    n = lax.axis_size(axis)
+    from repro.compat import axis_size
+    n = axis_size(axis)
     xf = x.astype(jnp.float32)
     if err is not None:
         xf = xf + err

@@ -1,10 +1,13 @@
-"""Pipeline parallelism built on LCX send/recv (GPipe schedule).
+"""Pipeline parallelism as an AMT task graph over LCX (GPipe schedule).
 
 The paper's AMT communication pattern — many fine-grained asynchronous
 point-to-point transfers with explicit completion — is exactly the
-inter-stage traffic of a pipeline.  Each tick, every stage posts an LCX
-``put`` of its activation to the successor, calls ``progress()`` (the
-overlap point), and waits on a synchronizer.
+inter-stage traffic of a pipeline.  Here the GPipe schedule is built as
+a :class:`repro.amt.TaskGraph`: every tick of the per-rank schedule is a
+*task* (the stage × micro-batch cell this rank computes that tick), and
+every inter-stage activation transfer is an *edge* realized as an LCX
+``put`` whose completion resumes the suspended tick through the
+executor's completion queue — no synchronizer polling in the schedule.
 
 Run :func:`gpipe` under ``shard_map`` over the ``pipe`` axis; each rank
 holds the parameters of its stage only (params sharded P('pipe', ...)
@@ -18,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
           stage_params: Any, microbatches: jax.Array, *,
@@ -28,24 +33,79 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
 
     Schedule: M + n_stages - 1 ticks; rank r works on microbatch t - r at
     tick t (bubble ticks compute on garbage and are masked out).
-    """
-    import repro.core as lcx
 
-    n = lax.axis_size(axis)
+    ``use_lcx=True`` drives the schedule through an AMT executor (tick
+    tasks chained by LCX-put edges); ``use_lcx=False`` is the native
+    ``lax.scan``/``ppermute`` reference schedule.
+    """
+    if not use_lcx:
+        return _gpipe_native(stage_fn, stage_params, microbatches,
+                             axis=axis)
+    return _gpipe_taskgraph(stage_fn, stage_params, microbatches,
+                            axis=axis)
+
+
+def _gpipe_taskgraph(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                     stage_params: Any, microbatches: jax.Array, *,
+                     axis: str) -> jax.Array:
+    import repro.core as lcx
+    from repro.amt import Executor
+
+    n = axis_size(axis)
     idx = lax.axis_index(axis)
     M = microbatches.shape[0]
     mb_shape = microbatches.shape[1:]
-    dev = lcx.Device(axis=axis) if use_lcx else None
 
-    def shift_next(y: jax.Array) -> jax.Array:
-        if use_lcx:
-            sync = lcx.Synchronizer(threshold=1)
-            lcx.put_x(y).perm(lcx.Perm.shift(1)).remote_comp(sync) \
-                .device(dev)()
-            lcx.progress_x().device(dev)()
-            (ev,) = sync.wait()
-            return ev.payload
-        return lax.ppermute(y, axis, [(i, (i + 1) % n) for i in range(n)])
+    dev = lcx.Device(axis=axis)
+    ex = Executor(device=dev, name="gpipe")
+    # Mutable per-rank cells the tick tasks thread state through: the
+    # activation arriving from the predecessor stage, and the output
+    # accumulator (valid rows written by the last stage only).
+    cells = {
+        "incoming": jnp.zeros(mb_shape, microbatches.dtype),
+        "outputs": jnp.zeros((M,) + mb_shape, microbatches.dtype),
+    }
+
+    def make_tick(t: int):
+        def tick(ctx):
+            mb_idx = min(t, M - 1)
+            first = microbatches[mb_idx]
+            x_in = jnp.where(idx == 0, first, cells["incoming"])
+            y = stage_fn(stage_params, x_in)
+            if t >= n - 1:
+                out_idx = min(t - (n - 1), M - 1)
+                cur = cells["outputs"][out_idx]
+                cells["outputs"] = cells["outputs"].at[out_idx].set(
+                    jnp.where(idx == n - 1, y, cur))
+            # Edge to the next tick: put the activation to the successor
+            # stage and suspend until the predecessor's put lands here.
+            ctx.put(y, lcx.Perm.shift(1))
+            return ctx.suspend(
+                lambda ev: cells.__setitem__("incoming", ev.payload))
+
+        return tick
+
+    prev = None
+    for t in range(M + n - 1):
+        prev = ex.spawn(make_tick(t), deps=(prev,) if prev else (),
+                        priority=-t, name=f"tick{t}")
+    ex.run()
+
+    # broadcast final outputs from the last stage to every rank
+    outputs = cells["outputs"]
+    mask = (idx == n - 1).astype(outputs.dtype)
+    return lax.psum(outputs * mask, axis)
+
+
+def _gpipe_native(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                  stage_params: Any, microbatches: jax.Array, *,
+                  axis: str) -> jax.Array:
+    """Reference schedule: one ``lax.scan`` over ticks, shifts via raw
+    ``ppermute`` (no LCX, no executor)."""
+    n = axis_size(axis)
+    idx = lax.axis_index(axis)
+    M = microbatches.shape[0]
+    mb_shape = microbatches.shape[1:]
 
     def tick(carry, t):
         incoming, outputs = carry
@@ -59,14 +119,14 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
         cur = lax.dynamic_index_in_dim(outputs, out_idx, 0, keepdims=False)
         outputs = lax.dynamic_update_index_in_dim(
             outputs, jnp.where(valid, y, cur), out_idx, 0)
-        incoming = shift_next(y)
+        incoming = lax.ppermute(y, axis,
+                                [(i, (i + 1) % n) for i in range(n)])
         return (incoming, outputs), None
 
     outputs0 = jnp.zeros((M,) + mb_shape, microbatches.dtype)
     incoming0 = jnp.zeros(mb_shape, microbatches.dtype)
     (_, outputs), _ = lax.scan(tick, (incoming0, outputs0),
                                jnp.arange(M + n - 1))
-    # broadcast final outputs from the last stage to every rank
     mask = (idx == n - 1).astype(outputs.dtype)
     return lax.psum(outputs * mask, axis)
 

@@ -67,10 +67,11 @@ def pp_apply_model(cfg: Any, params: PyTree, tokens: jax.Array, *,
         lcx.init()
         return gpipe(stage_fn, stack, micro_, axis="pipe")
 
+    from repro.compat import shard_map
     stack_spec = jax.tree.map(lambda _: P("pipe"), params["stack"])
-    out_micro = jax.shard_map(
+    out_micro = shard_map(
         region, mesh=mesh, in_specs=(stack_spec, P()), out_specs=P(),
-        axis_names={"pipe"}, check_vma=False)(params["stack"], micro)
+        axis_names={"pipe"}, check=False)(params["stack"], micro)
     x = out_micro.reshape(b, s, d)
     return _head_out(cfg, params, x)
 

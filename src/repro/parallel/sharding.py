@@ -26,6 +26,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import abstract_mesh
+
 Rules = Dict[str, Tuple[str, ...]]
 
 # logical dim -> preferred mesh axes (tried in order, prefix-divisible)

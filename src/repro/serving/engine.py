@@ -13,6 +13,13 @@ roofline terms come from the dry-run of ``serve_step``.
 Per-slot state (lengths, completion) is host-side; the device-side
 decode uses per-slot length masks so slots at different positions can
 coexist in one batch (continuous batching).
+
+Scheduling: each ``tick`` is driven through an AMT executor
+(`repro.amt.Executor`) — one admission task per queued request
+(priority = arrival order) and one decode task depending on all of
+them, so prefill admission and decode advancement are ordinary tasks a
+larger task graph can compose with.  ``use_executor=False`` keeps the
+inline loop.
 """
 from __future__ import annotations
 
@@ -94,11 +101,17 @@ def make_decode_fn(cfg: Any, kernels: Optional[Dict[str, Any]] = None):
 
 class ServingEngine:
     def __init__(self, cfg: Any, params: PyTree, scfg: ServeConfig,
-                 kernels: Optional[Dict[str, Any]] = None) -> None:
+                 kernels: Optional[Dict[str, Any]] = None, *,
+                 use_executor: bool = True) -> None:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.kernels = kernels
+        if use_executor:
+            from repro.amt import Executor
+            self._executor: Optional[Executor] = Executor(name="serving")
+        else:
+            self._executor = None
         self.caches = init_cache(cfg, scfg.n_slots, scfg.max_seq)
         self.lengths = np.zeros((scfg.n_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * scfg.n_slots
@@ -133,55 +146,90 @@ class ServingEngine:
         return self._prefill_cache[plen]
 
     def _admit(self) -> None:
-        free = self._free_slots()
-        while free and self.queue:
-            slot = free.pop(0)
+        while self._free_slots() and self.queue:
             req = self.queue.pop(0)
-            plen = len(req.prompt)
-            if plen >= self.scfg.max_seq:
-                req.done = True
-                self.finished.append(req)
-                continue
-            toks = jnp.asarray(req.prompt, jnp.int32)
-            axes = cache_batch_axes(self.cfg, self.caches)
-            slot_cache = jax.tree.map(
-                lambda t, a: jnp.take(t, slot, axis=a), self.caches, axes)
-            # exact-length prefill: one compiled program per distinct
-            # prompt length (bucketing would corrupt SSM prefill state —
-            # the recurrent state cannot mask padding the way KV rows can)
-            lg, new_cache = self._prefill_fn(plen)(
-                self.params, toks, slot_cache)
-            self.caches = jax.tree.map(
-                lambda buf, nc, a: jax.lax.dynamic_update_slice_in_dim(
-                    buf, jnp.expand_dims(nc, a).astype(buf.dtype),
-                    slot, axis=a),
-                self.caches, new_cache, axes)
-            self.lengths[slot] = plen
-            self.slot_req[slot] = req
-            self.stats["prefills"] += 1
-            # sample the first generated token from the prefill logits
-            self._key, sub = jax.random.split(self._key)
-            tok = int(np.asarray(sample_token(
-                lg[None], self.scfg.temperature, sub))[0])
-            req.output.append(tok)
-            self.stats["decoded_tokens"] += 1
-            # the first token may already terminate the request
-            limit = req.max_new_tokens or self.scfg.max_new_tokens
-            if (self.scfg.eos_token is not None
-                    and tok == self.scfg.eos_token) \
-                    or len(req.output) >= limit:
-                req.done = True
-                req.finished_at = time.perf_counter()
-                self.finished.append(req)
-                self.slot_req[slot] = None
-                self.lengths[slot] = 0
-                free.insert(0, slot)
+            self._admit_one(req)
+
+    def _admit_one(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot.  Returns False when no slot
+        is free (caller re-queues); True when the request was placed or
+        terminally handled."""
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        plen = len(req.prompt)
+        if plen >= self.scfg.max_seq:
+            req.done = True
+            self.finished.append(req)
+            return True
+        toks = jnp.asarray(req.prompt, jnp.int32)
+        axes = cache_batch_axes(self.cfg, self.caches)
+        slot_cache = jax.tree.map(
+            lambda t, a: jnp.take(t, slot, axis=a), self.caches, axes)
+        # exact-length prefill: one compiled program per distinct
+        # prompt length (bucketing would corrupt SSM prefill state —
+        # the recurrent state cannot mask padding the way KV rows can)
+        lg, new_cache = self._prefill_fn(plen)(
+            self.params, toks, slot_cache)
+        self.caches = jax.tree.map(
+            lambda buf, nc, a: jax.lax.dynamic_update_slice_in_dim(
+                buf, jnp.expand_dims(nc, a).astype(buf.dtype),
+                slot, axis=a),
+            self.caches, new_cache, axes)
+        self.lengths[slot] = plen
+        self.slot_req[slot] = req
+        self.stats["prefills"] += 1
+        # sample the first generated token from the prefill logits
+        self._key, sub = jax.random.split(self._key)
+        tok = int(np.asarray(sample_token(
+            lg[None], self.scfg.temperature, sub))[0])
+        req.output.append(tok)
+        self.stats["decoded_tokens"] += 1
+        # the first token may already terminate the request
+        limit = req.max_new_tokens or self.scfg.max_new_tokens
+        if (self.scfg.eos_token is not None
+                and tok == self.scfg.eos_token) \
+                or len(req.output) >= limit:
+            req.done = True
+            req.finished_at = time.perf_counter()
+            self.finished.append(req)
+            self.slot_req[slot] = None
+            self.lengths[slot] = 0
+        return True
 
     # -- decode tick ----------------------------------------------------------
     def tick(self) -> int:
         """Admit + one decode step for all active slots.  Returns the
-        number of live slots advanced."""
+        number of live slots advanced.
+
+        With an executor, admission and decode run as a per-tick task
+        graph: one prefill-admission task per queued request (priority
+        keeps arrival order) feeding one decode task."""
+        if self._executor is not None:
+            return self._tick_executor()
         self._admit()
+        return self._decode_tick()
+
+    def _tick_executor(self) -> int:
+        ex = self._executor
+        queued, self.queue = list(self.queue), []
+        admissions = []
+        for k, req in enumerate(queued):
+            def admit(ctx, _req=req):
+                if not self._admit_one(_req):
+                    self.queue.append(_req)   # no free slot: re-queue
+
+            admissions.append(ex.spawn(
+                admit, priority=len(queued) - k,
+                name=f"prefill:{req.rid}"))
+        decode = ex.spawn(lambda ctx: self._decode_tick(),
+                          deps=tuple(admissions), priority=-1,
+                          name="decode")
+        ex.run()
+        return decode.result
+
+    def _decode_tick(self) -> int:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return 0

@@ -33,8 +33,8 @@ def test_moe_ep_lcx_matches_local_oracle():
         from repro.configs.base import ModelConfig
         from repro.models import init_model, apply_model
         from repro.parallel.sharding import use_mesh, param_shardings
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         f32 = dict(dtype=jnp.float32, param_dtype=jnp.float32, q_block=8)
         cfg = ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=128, vocab=97,
@@ -60,12 +60,12 @@ def test_ring_allgather_pallas_kernel():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.kernels.ring_allgather import ring_all_gather
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, shard_map
+        mesh = make_mesh((8,), ("x",))
         x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
-        f = jax.shard_map(lambda s: ring_all_gather(s, "x", axis_size=8),
-                          mesh=mesh, in_specs=P("x", None),
-                          out_specs=P("x", None), check_vma=False)
+        f = shard_map(lambda s: ring_all_gather(s, "x", axis_size=8),
+                      mesh, in_specs=P("x", None),
+                      out_specs=P("x", None))
         out = jax.jit(f)(x)
         got = np.asarray(out).reshape(8, 8, 16)
         assert (got == np.asarray(x)[None]).all()
@@ -78,14 +78,14 @@ def test_train_step_sharded_matches_single_device():
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs.base import ModelConfig
         from repro.runtime import Trainer, TrainConfig
+        from repro.compat import make_mesh
         cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
                           n_kv_heads=2, d_ff=128, vocab=211,
                           dtype=jnp.float32, param_dtype=jnp.float32,
                           remat="none", q_block=8)
         tcfg = TrainConfig(lr=1e-3, warmup=0, total_steps=4, seq_len=32,
                            global_batch=8, donate=False)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         tr_m = Trainer(cfg, tcfg, mesh=mesh)
         tr_1 = Trainer(cfg, tcfg, mesh=None)
         tr_m._run_until(2)
@@ -105,15 +105,15 @@ def test_elastic_remesh_preserves_state():
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs.base import ModelConfig
         from repro.runtime import Trainer, TrainConfig
+        from repro.compat import make_mesh
         cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
                           n_kv_heads=2, d_ff=128, vocab=211,
                           dtype=jnp.float32, param_dtype=jnp.float32,
                           remat="none", q_block=8)
         tcfg = TrainConfig(lr=1e-3, warmup=0, total_steps=8, seq_len=32,
                            global_batch=8, donate=False)
-        ax = (jax.sharding.AxisType.Auto,)*2
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"), axis_types=ax)
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"), axis_types=ax)
+        mesh8 = make_mesh((4, 2), ("data", "model"))
+        mesh4 = make_mesh((2, 2), ("data", "model"))
         tr = Trainer(cfg, tcfg, mesh=mesh8)
         tr._run_until(2)
         before = np.concatenate([np.asarray(x).ravel()
@@ -137,9 +137,9 @@ def test_seq_sharded_decode_paths():
         from repro.models import (init_model, init_cache, prefill,
                                   decode_step)
         from repro.parallel.sharding import use_mesh, param_shardings
+        from repro.compat import make_mesh
         from repro.launch.steps import cache_dims, decode_rules
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         f32 = dict(dtype=jnp.float32, param_dtype=jnp.float32, q_block=8)
         cfg = ModelConfig(name="g", n_layers=2, d_model=64, n_heads=6,
                           n_kv_heads=2, d_ff=128, vocab=97, **f32)
@@ -175,9 +175,9 @@ def test_resident_expert_decode_matches_oracle():
         from repro.configs.base import ModelConfig
         from repro.models import init_model, init_cache, prefill, decode_step
         from repro.parallel.sharding import use_mesh, param_shardings
+        from repro.compat import make_mesh
         from repro.launch.steps import cache_dims, decode_rules
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         f32 = dict(dtype=jnp.float32, param_dtype=jnp.float32, q_block=8)
         cfg = ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=128, vocab=97,
@@ -218,8 +218,8 @@ def test_pipeline_parallel_forward_and_grads():
         from repro.models import init_model, apply_model, loss_fn
         from repro.parallel.pp import pp_apply_model, pp_loss
         from repro.parallel.sharding import use_mesh
-        mesh = jax.make_mesh((4, 2), ("pipe", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ("pipe", "data"))
         cfg = ModelConfig(name="pp", n_layers=8, d_model=64, n_heads=4,
                           n_kv_heads=2, d_ff=128, vocab=97,
                           dtype=jnp.float32, param_dtype=jnp.float32,

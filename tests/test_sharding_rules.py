@@ -1,18 +1,18 @@
 """Logical-axis sharding rules: divisibility, axis dedup, overrides."""
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import (DEFAULT_RULES, dp_axes, logical_spec,
-                                     use_mesh)
+from repro.parallel.sharding import (DEFAULT_RULES, abstract_mesh, dp_axes,
+                                     logical_spec, use_mesh)
 
 
 def mesh2():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh3():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_batch_takes_pod_and_data():
@@ -110,10 +110,9 @@ def test_pick_chunks_tp_aligned():
 
 
 def test_resident_plan_budget():
-    from jax.sharding import AbstractMesh
     from repro.configs.base import get_config
     from repro.models.moe import resident_plan
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     # dsv3: 256 experts / 256 chips, small experts -> resident
     assert set(resident_plan(get_config("deepseek-v3-671b"), mesh)) == \
         {"data", "model"}
