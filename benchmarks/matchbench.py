@@ -1,0 +1,279 @@
+"""Progress-engine fast-path benchmark: post+match throughput and
+per-device ledger drain.
+
+The LCI papers attribute multithreaded message-rate to hash-table tag
+matching; this benchmark measures the trace-time analogue.  It sweeps
+pending-op depth across matching kinds/policies and compares the keyed
+hash-bucket engine (``repro.core.resources.MatchingEngine``) against a
+faithful reimplementation of the pre-optimization O(S×R) scan engine
+(``LegacyScanEngine`` below — the "before" in the emitted JSON).
+
+Workload per (kind, policy, depth D): post D sends with distinct keys
+(building pending depth D), then D recvs in *reverse* key order (the
+out-of-order arrival pattern map-mode matching exists for).  Throughput
+is total posts / wall time.  The legacy engine is O(S×R) per post here,
+so it is only run up to ``--legacy-max-depth`` (default 4096) to keep
+runtimes sane; the keyed engine runs the full sweep.
+
+A second section measures ``Runtime.take_ready(device)``: per-device
+ledger pop (new) vs the old quadratic filter over one global list.
+
+Emits ``BENCH_progress.json`` (``--out``) with before/after rows;
+``--smoke`` trims depths for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.core as lcx
+from repro.core.resources import MatchingEngine, PostedOp
+
+DEPTHS = (64, 256, 1024, 4096, 8192)
+MATRIX: Tuple[Tuple[str, str], ...] = (
+    ("map", "none"),
+    ("map", "tag_only"),
+    ("map", "rank_only"),
+    ("map", "rank_tag"),
+    ("map", "custom"),
+    ("queue", "tag_only"),
+)
+
+
+class LegacyScanEngine:
+    """The pre-optimization matching engine: one pending list per side,
+    full O(S×R) rescan (with per-comparison key recomputation) after
+    every post.  Kept here as the benchmark baseline — do not use."""
+
+    def __init__(self, kind: str = "map", policy: str = "rank_tag",
+                 key_fn=None) -> None:
+        self.kind = kind
+        self.policy = policy
+        self.key_fn = key_fn
+        self._pending_send: deque = deque()
+        self._pending_recv: deque = deque()
+        self.n_matched = 0
+
+    def _key(self, op: PostedOp) -> Any:
+        policy = self.policy
+        axis_size = op.device.axis_size
+        if policy == "none":
+            return ()
+        if policy == "rank_only":
+            return tuple(sorted(op.perm.pairs_for(axis_size))) \
+                if op.perm else ()
+        if policy == "tag_only":
+            return op.tag
+        if policy == "rank_tag":
+            return ((tuple(sorted(op.perm.pairs_for(axis_size)))
+                     if op.perm else ()), op.tag)
+        return self.key_fn(op)
+
+    def post(self, op: PostedOp) -> List[Tuple[PostedOp, PostedOp]]:
+        if op.kind == "send":
+            self._pending_send.append(op)
+        else:
+            self._pending_recv.append(op)
+        return self._drain()
+
+    def _drain(self) -> List[Tuple[PostedOp, PostedOp]]:
+        matches: List[Tuple[PostedOp, PostedOp]] = []
+        if self.kind == "queue":
+            while self._pending_send and self._pending_recv:
+                s, r = self._pending_send[0], self._pending_recv[0]
+                if self._key(s) != self._key(r):
+                    break
+                self._pending_send.popleft()
+                self._pending_recv.popleft()
+                matches.append((s, r))
+        else:
+            changed = True
+            while changed:
+                changed = False
+                for s in list(self._pending_send):
+                    ks = self._key(s)
+                    for r in list(self._pending_recv):
+                        if ks == self._key(r):
+                            self._pending_send.remove(s)
+                            self._pending_recv.remove(r)
+                            matches.append((s, r))
+                            changed = True
+                            break
+                    if changed:
+                        break
+        self.n_matched += len(matches)
+        return matches
+
+
+def _make_ops(policy: str, depth: int,
+              device: lcx.Device) -> Tuple[List[PostedOp], List[PostedOp]]:
+    """D sends with distinct keys plus matching recvs in reverse order."""
+    perms = None
+    if policy in ("rank_only", "rank_tag"):
+        perms = [lcx.Perm.pairs([(0, i)]) for i in range(depth)]
+
+    def op(kind: str, i: int, seq: int) -> PostedOp:
+        return PostedOp(kind=kind, buffer=None,
+                        perm=perms[i] if perms else None,
+                        tag=i, comp=None, device=device, seq=seq)
+
+    if policy == "none":
+        # every op has the same key; depth still builds because all the
+        # sends are posted before any recv
+        sends = [op("send", 0, i) for i in range(depth)]
+        recvs = [op("recv", 0, depth + i) for i in range(depth)]
+        return sends, recvs
+    sends = [op("send", i, i) for i in range(depth)]
+    order = range(depth) if policy == "queue-inorder" else \
+        range(depth - 1, -1, -1)
+    recvs = [op("recv", i, depth + i) for i in order]
+    return sends, recvs
+
+
+def _engine(cls, kind: str, policy: str):
+    key_fn = (lambda o: o.tag) if policy == "custom" else None
+    eng_policy = "custom" if policy == "custom" else policy
+    return cls(kind=kind, policy=eng_policy, key_fn=key_fn)
+
+
+def bench_post_match(kind: str, policy: str, depth: int,
+                     legacy: bool) -> Optional[Dict[str, Any]]:
+    device = lcx.Device(axis="x", mesh_shape={"x": 2})
+    # queue mode only matches in order; reverse recvs would just pend
+    sends, recvs = _make_ops(
+        "queue-inorder" if kind == "queue" else policy, depth, device)
+    if kind == "queue":
+        s2, _ = _make_ops(policy if policy != "custom" else "tag_only",
+                          depth, device)
+        for a, b in zip(sends, s2):
+            a.perm = b.perm
+    cls = LegacyScanEngine if legacy else MatchingEngine
+    eng = _engine(cls, kind, policy)
+    n_ops = 2 * depth
+    t0 = time.perf_counter()
+    for s in sends:
+        eng.post(s)
+    for r in recvs:
+        eng.post(r)
+    dt = time.perf_counter() - t0
+    if eng.n_matched != depth:
+        raise AssertionError(
+            f"{'legacy' if legacy else 'keyed'} {kind}/{policy} depth "
+            f"{depth}: matched {eng.n_matched}, expected {depth}")
+    return {"kind": kind, "policy": policy, "depth": depth,
+            "engine": "legacy-scan" if legacy else "keyed",
+            "seconds": dt, "ops_per_s": n_ops / max(dt, 1e-12)}
+
+
+class LegacyLedger:
+    """Pre-optimization global ready list with quadratic filtering."""
+
+    def __init__(self) -> None:
+        self._ready: List[Tuple[PostedOp, PostedOp]] = []
+
+    def enqueue_matches(self, matches) -> None:
+        self._ready.extend(matches)
+
+    def take_ready(self, device=None):
+        if device is None:
+            out, self._ready = self._ready, []
+            return out
+        out = [m for m in self._ready
+               if m[0].device is device or m[1].device is device]
+        self._ready = [m for m in self._ready if m not in out]
+        return out
+
+
+def bench_take_ready(n_devices: int, per_device: int,
+                     legacy: bool) -> Dict[str, Any]:
+    devices = [lcx.Device(axis="x", mesh_shape={"x": 2})
+               for _ in range(n_devices)]
+    ledger = LegacyLedger() if legacy else lcx.init()
+    seq = 0
+    for i in range(per_device):
+        for d in devices:
+            s = PostedOp(kind="send", buffer=None, perm=None, tag=i,
+                         comp=None, device=d, seq=seq)
+            r = PostedOp(kind="recv", buffer=None, perm=None, tag=i,
+                         comp=None, device=d, seq=seq)
+            seq += 1
+            ledger.enqueue_matches([(s, r)])
+    t0 = time.perf_counter()
+    total = 0
+    for d in devices:
+        total += len(ledger.take_ready(d))
+    dt = time.perf_counter() - t0
+    if total != n_devices * per_device:
+        raise AssertionError(f"ledger drained {total} matches, expected "
+                             f"{n_devices * per_device}")
+    return {"n_devices": n_devices, "per_device": per_device,
+            "engine": "legacy-list" if legacy else "per-device",
+            "seconds": dt, "matches_per_s": total / max(dt, 1e-12)}
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small depths for CI sanity")
+    ap.add_argument("--depths", type=int, nargs="*", default=None)
+    ap.add_argument("--legacy-max-depth", type=int, default=4096,
+                    help="skip the O(S×R) baseline above this depth")
+    ap.add_argument("--out", type=str, default="BENCH_progress.json")
+    args = ap.parse_args(argv)
+
+    depths = tuple(args.depths) if args.depths else \
+        ((64, 256) if args.smoke else DEPTHS)
+    lcx.init()
+
+    rows: List[Dict[str, Any]] = []
+    print(f"{'kind':6s} {'policy':10s} {'depth':>6s} "
+          f"{'keyed Mops/s':>13s} {'legacy Mops/s':>14s} {'speedup':>8s}")
+    for kind, policy in MATRIX:
+        for depth in depths:
+            new = bench_post_match(kind, policy, depth, legacy=False)
+            old = None
+            if depth <= args.legacy_max_depth:
+                old = bench_post_match(kind, policy, depth, legacy=True)
+            row = dict(new)
+            row["legacy_ops_per_s"] = old["ops_per_s"] if old else None
+            row["legacy_seconds"] = old["seconds"] if old else None
+            row["speedup"] = (new["ops_per_s"] / old["ops_per_s"]
+                              if old else None)
+            rows.append(row)
+            print(f"{kind:6s} {policy:10s} {depth:6d} "
+                  f"{new['ops_per_s'] / 1e6:13.3f} "
+                  f"{(old['ops_per_s'] / 1e6) if old else float('nan'):14.3f} "
+                  f"{row['speedup'] if row['speedup'] else float('nan'):8.1f}")
+
+    ledger_rows: List[Dict[str, Any]] = []
+    n_dev, per_dev = (4, 64) if args.smoke else (8, 2048)
+    for legacy in (False, True):
+        ledger_rows.append(bench_take_ready(n_dev, per_dev, legacy))
+    spd = (ledger_rows[0]["matches_per_s"] /
+           max(ledger_rows[1]["matches_per_s"], 1e-12))
+    print(f"take_ready({n_dev} devices x {per_dev}): per-device "
+          f"{ledger_rows[0]['matches_per_s'] / 1e6:.3f} Mmatch/s vs legacy "
+          f"{ledger_rows[1]['matches_per_s'] / 1e6:.3f} Mmatch/s "
+          f"({spd:.1f}x)")
+
+    out = {"post_match": rows, "take_ready": ledger_rows,
+           "smoke": bool(args.smoke)}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    print("MATCHBENCH_JSON=" + json.dumps(
+        {"n_rows": len(rows),
+         "min_speedup": min((r["speedup"] for r in rows if r["speedup"]),
+                            default=None)}))
+    return out
+
+
+if __name__ == "__main__":
+    main()

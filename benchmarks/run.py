@@ -3,10 +3,12 @@
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Sections:
-1. pingpong          — paper Fig. 1 (lanes sweep × 3 designs)
-2. lcx_collectives   — LCX ring/pairwise vs native XLA collectives
-3. moe_dispatch      — EP a2a dispatch throughput (LCX a2a backends)
-4. kernels_bench     — Pallas kernels vs oracles
+1. matchbench        — progress-engine post+match throughput (keyed vs
+                       legacy scan), emits BENCH_progress.json
+2. pingpong          — paper Fig. 1 (lanes sweep × 3 designs)
+3. lcx_collectives   — LCX ring/pairwise vs native XLA collectives
+4. moe_dispatch      — EP a2a dispatch throughput (LCX a2a backends)
+5. kernels_bench     — Pallas kernels vs oracles
 CSV outputs land in results/.
 """
 import argparse
@@ -24,6 +26,15 @@ def main() -> None:
     args = p.parse_args()
 
     os.makedirs("results", exist_ok=True)
+
+    print("=" * 72)
+    print("0. matching/progress fast path (keyed engine vs legacy scan)")
+    print("=" * 72)
+    import matchbench
+    mb_args = ["--out", "results/BENCH_progress.json"]
+    if args.fast:
+        mb_args.append("--smoke")
+    matchbench.main(mb_args)
 
     print("=" * 72)
     print("1. ping-pong (paper Fig. 1: message rate vs concurrent lanes)")

@@ -125,6 +125,7 @@ class Executor:
                  pool: Optional[lcx.PacketPool] = None,
                  graph: Optional[TaskGraph] = None, *,
                  progress_every: int = 8,
+                 adaptive_progress: bool = True,
                  max_inflight: Optional[int] = None,
                  cq: Optional[lcx.CompletionQueue] = None,
                  name: str = "amt") -> None:
@@ -134,6 +135,13 @@ class Executor:
         self.graph = graph or TaskGraph()
         self.cq = cq if cq is not None else lcx.CompletionQueue()
         self.progress_every = max(1, progress_every)
+        # Adaptive interval: doubles (up to 16x) each time a progress
+        # call retires nothing, snaps back to ``progress_every`` as soon
+        # as one retires something — idle polling backs off, busy phases
+        # keep the configured cadence.
+        self.adaptive_progress = adaptive_progress
+        self._progress_interval = self.progress_every
+        self._max_interval = self.progress_every * 16
         if max_inflight is None:
             if pool is not None:
                 max_inflight = pool.get_attr_npackets()
@@ -143,6 +151,7 @@ class Executor:
         self.stats: Dict[str, int] = {
             "tasks_run": 0, "tasks_resumed": 0, "progress_calls": 0,
             "events_retired": 0, "backpressure_stalls": 0,
+            "backpressure_deferrals": 0, "progress_backoffs": 0,
             "watch_fires": 0, "cycles": 0,
         }
         self._heap: List[Tuple[int, int, Task]] = []
@@ -201,14 +210,25 @@ class Executor:
             self.stats["cycles"] += 1
             before = self._activity
             while self._heap:
-                if lcx.runtime().pending_count() >= self.max_inflight:
+                deferred = False
+                while lcx.runtime().pending_count() >= self.max_inflight:
                     self.stats["backpressure_stalls"] += 1
+                    pending_before = lcx.runtime().pending_count()
                     self._progress_and_retire()
+                    if lcx.runtime().pending_count() >= pending_before:
+                        # progress could not shrink the ledger — admitting
+                        # more work would only deepen it; defer until the
+                        # outer flush (or an external drain) frees packets
+                        self.stats["backpressure_deferrals"] += 1
+                        deferred = True
+                        break
+                if deferred:
+                    break
                 task = self._pop()
                 if task is None:
                     break
                 self._execute(task)
-                if self._posted_since_progress >= self.progress_every:
+                if self._posted_since_progress >= self._progress_interval:
                     self._progress_and_retire()
             # Flush communication even when no task is runnable — an
             # arriving message may spawn work (active-message handlers).
@@ -273,26 +293,33 @@ class Executor:
         op()
         self.stats["progress_calls"] += 1
         self._posted_since_progress = 0
-        n = 0
-        # Retire communication-suspended tasks from the completion queue.
-        for ev in self.cq.pop_all():
-            n += 1
-            self.stats["events_retired"] += 1
+        # Batched retirement: ONE completion-queue drain per progress
+        # call.  Events are first sorted into their suspended tasks; the
+        # tasks whose event count is met resume in a single second pass
+        # (resumptions may spawn/post, so they must not interleave with
+        # the drain itself).
+        events = self.cq.pop_all()
+        n = len(events)
+        self.stats["events_retired"] += n
+        resumable: List[Task] = []
+        for ev in events:
             task = ev.context
             if not isinstance(task, Task):
                 continue  # foreign traffic on a shared queue
             susp = task._suspension
-            if susp is None:
-                continue
+            if susp is None or len(susp["events"]) >= susp["need"]:
+                continue  # not suspended / already satisfied this batch
             susp["events"].append(ev)
-            if len(susp["events"]) < susp["need"]:
-                continue
+            if len(susp["events"]) == susp["need"]:
+                resumable.append(task)
+        for task in resumable:
+            susp = task._suspension
             task._suspension = None
             k = susp["k"]
-            events = susp["events"]
+            evs = susp["events"]
             value = None
             if k is not None:
-                value = k(events[0]) if susp["need"] == 1 else k(events)
+                value = k(evs[0]) if susp["need"] == 1 else k(evs)
             self.stats["tasks_resumed"] += 1
             self._retire(task, value)
         # Resolve watched completion objects (threshold counters etc.).
@@ -305,4 +332,14 @@ class Executor:
             else:
                 still.append((comp, k, promise))
         self._watches = still
+        # Adaptive back-off: a progress call that retires nothing widens
+        # the posting interval; any retirement snaps it back.
+        if self.adaptive_progress:
+            if n == 0:
+                if self._progress_interval < self._max_interval:
+                    self._progress_interval = min(
+                        self._progress_interval * 2, self._max_interval)
+                    self.stats["progress_backoffs"] += 1
+            else:
+                self._progress_interval = self.progress_every
         return n

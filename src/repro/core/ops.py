@@ -245,6 +245,11 @@ class progress_x(FlexOp):
     when and how frequently to invoke the communication progress engine."
     Trace-time meaning: *where* you call progress is where the transfers
     are placed in the program — the overlap knob.
+
+    Returns the number of *actual transfers* materialized (an aggregated
+    group is one transfer; loopback deliveries are zero), and
+    ``max_transfers`` limits that same count — loopback groups never
+    consume the budget.
     """
 
     _positional = ()
@@ -264,9 +269,25 @@ class progress_x(FlexOp):
         return n
 
 
+def _pack_class(dtype: Any) -> str:
+    """Aggregation packing class.  Bitcast-safe dtypes share one byte-view
+    class so mixed-dtype eager messages on the same perm ride one
+    transfer; bools (no uint8 bitcast) aggregate only among themselves."""
+    dt = jnp.dtype(dtype)
+    if dt.kind == "b":
+        return f"dtype:{dt.name}"
+    return "bytes"
+
+
 def _execute(matches: List[Tuple[PostedOp, PostedOp]],
              pool: Optional[PacketPool], limit: Optional[int]) -> int:
-    """Group, aggregate, and run matched transfers."""
+    """Group, aggregate, and run matched transfers.
+
+    Message stats (``eager_msgs``/``rendezvous_msgs``) are bumped only
+    for groups actually *executed* this call — matches re-enqueued by the
+    ``max_transfers`` budget are counted when they finally run, not on
+    every progress attempt.
+    """
     groups: Dict[Any, List[Tuple[PostedOp, PostedOp]]] = {}
     for s, r in matches:
         axis = s.device.axis
@@ -274,30 +295,33 @@ def _execute(matches: List[Tuple[PostedOp, PostedOp]],
                 and s.allow_aggregation and axis is not None
                 and pool.is_eager(_nbytes(s.buffer))):
             pkey = s.perm.key(s.device.axis_size) if s.perm else ()
-            key = ("agg", axis, pkey, jnp.dtype(s.buffer.dtype).name,
-                   id(s.device))
-            if pool is not None:
-                pool.stats["eager_msgs"] += 1
+            key = ("agg", axis, pkey, id(s.device),
+                   _pack_class(s.buffer.dtype))
         else:
             key = ("solo", id(s))
-            if pool is not None and axis is not None:
-                pool.stats["rendezvous_msgs"] += 1
         groups.setdefault(key, []).append((s, r))
 
     n_transfers = 0
     for key, grp in groups.items():
-        if limit is not None and n_transfers >= limit:
-            # leave the rest pending
+        cost = 0 if grp[0][0].device.axis is None else 1
+        if limit is not None and cost and n_transfers + cost > limit:
+            # out of transfer budget — leave the group pending
             runtime().enqueue_matches(grp)
             continue
-        if key[0] == "agg" and len(grp) > 1:
-            _run_aggregated(grp, pool)
+        if key[0] == "agg":
+            if pool is not None:
+                pool.stats["eager_msgs"] += len(grp)
+            if len(grp) > 1:
+                _run_aggregated(grp, pool)
+            else:
+                _run_single(*grp[0])
         else:
             for s, r in grp:
                 _run_single(s, r)
-                if pool is not None and key[0] == "solo":
+                if pool is not None and s.device.axis is not None:
+                    pool.stats["rendezvous_msgs"] += 1
                     pool.stats["raw_transfers"] += 1
-        n_transfers += 1
+        n_transfers += cost
     return n_transfers
 
 
@@ -312,32 +336,103 @@ def _permute(value: Any, dev: Device, perm: Optional[Perm]) -> Any:
     return lax.ppermute(value, axis_name=axis, perm=pairs)
 
 
-def _run_single(s: PostedOp, r: PostedOp) -> None:
-    value = _permute(s.buffer, s.device, s.perm)
+def _check_shapes(s: PostedOp, r: PostedOp) -> None:
     if getattr(r.buffer, "shape", None) is not None and hasattr(
             s.buffer, "shape"):
         if tuple(r.buffer.shape) != tuple(s.buffer.shape):
             raise ValueError(
                 f"matched send/recv shape mismatch: send {s.buffer.shape} "
                 f"vs recv {r.buffer.shape} (tag={s.tag})")
+
+
+def _run_single(s: PostedOp, r: PostedOp) -> None:
+    value = _permute(s.buffer, s.device, s.perm)
+    _check_shapes(s, r)
     _signal(s, r, value)
+
+
+@dataclasses.dataclass(eq=False)
+class AggPlan:
+    """A cached concat/slice layout for one aggregated transfer: how to
+    pack N eager messages into one flat buffer and carve the arrival back
+    into per-message payloads.  Keyed by (axis, perm-key, dtype-signature,
+    shape-signature), so steady-state progress loops (pipeline ticks,
+    serving decode steps) reuse the plan instead of re-deriving it."""
+
+    mixed: bool                      # byte-view packing (mixed dtypes)?
+    sizes: Tuple[int, ...]           # flat length per message (elems/bytes)
+    offsets: Tuple[int, ...]         # start offset per message
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    itemsizes: Tuple[int, ...]
+
+
+def _agg_plan(grp: List[Tuple[PostedOp, PostedOp]]) -> AggPlan:
+    """Look up or build the aggregation plan for a seq-sorted group."""
+    s0 = grp[0][0]
+    dtypes = tuple(jnp.dtype(s.buffer.dtype) for s, _ in grp)
+    shapes = tuple(tuple(s.buffer.shape) for s, _ in grp)
+    pkey = s0.perm.key(s0.device.axis_size) if s0.perm else ()
+    sig = (s0.device.axis, pkey, tuple(d.name for d in dtypes), shapes)
+    cache = runtime().agg_plans
+    plan = cache.get(sig)
+    if plan is not None:
+        runtime().plan_stats["hits"] += 1
+        return plan
+    runtime().plan_stats["misses"] += 1
+    mixed = len(set(dtypes)) > 1
+    itemsizes = tuple(d.itemsize for d in dtypes)
+    if mixed:
+        sizes = tuple(int(np.prod(sh, dtype=np.int64)) * isz
+                      for sh, isz in zip(shapes, itemsizes))
+    else:
+        sizes = tuple(int(np.prod(sh, dtype=np.int64)) for sh in shapes)
+    offsets, off = [], 0
+    for sz in sizes:
+        offsets.append(off)
+        off += sz
+    plan = AggPlan(mixed=mixed, sizes=sizes, offsets=tuple(offsets),
+                   shapes=shapes, dtypes=dtypes, itemsizes=itemsizes)
+    if len(cache) >= 4096:           # bound steady-state memory
+        cache.clear()
+    cache[sig] = plan
+    return plan
+
+
+def _byte_view(x: Any) -> Any:
+    """Flat uint8 view of an array (bitcast appends an itemsize-wide
+    trailing dim for multi-byte dtypes; ravel flattens it away)."""
+    return jnp.ravel(lax.bitcast_convert_type(x, jnp.uint8))
 
 
 def _run_aggregated(grp: List[Tuple[PostedOp, PostedOp]],
                     pool: Optional[PacketPool]) -> None:
-    """Pack eager messages sharing (axis, perm, dtype) into one transfer."""
+    """Pack eager messages sharing (axis, perm) into one transfer.
+
+    Same-dtype groups concatenate directly; mixed-dtype groups ride a
+    byte view (uint8 bitcast) so one packed transfer still suffices.
+    """
     grp = sorted(grp, key=lambda m: m[0].seq)
-    flats = [jnp.ravel(s.buffer) for s, _ in grp]
-    sizes = [f.shape[0] for f in flats]
+    for s, r in grp:
+        _check_shapes(s, r)
+    plan = _agg_plan(grp)
+    if plan.mixed:
+        flats = [_byte_view(s.buffer) for s, _ in grp]
+    else:
+        flats = [jnp.ravel(s.buffer) for s, _ in grp]
     packed = jnp.concatenate(flats, axis=0)
     out = _permute(packed, grp[0][0].device, grp[0][0].perm)
     if pool is not None:
         pool.stats["aggregated_transfers"] += 1
-    off = 0
-    for (s, r), sz in zip(grp, sizes):
+    for (s, r), off, sz, shape, dt, isz in zip(
+            grp, plan.offsets, plan.sizes, plan.shapes, plan.dtypes,
+            plan.itemsizes):
         piece = lax.dynamic_slice_in_dim(out, off, sz, axis=0)
-        off += sz
-        _signal(s, r, piece.reshape(s.buffer.shape))
+        if plan.mixed:
+            if isz > 1:
+                piece = piece.reshape(sz // isz, isz)
+            piece = lax.bitcast_convert_type(piece, dt)
+        _signal(s, r, piece.reshape(shape))
 
 
 def _signal(s: PostedOp, r: PostedOp, value: Any) -> None:

@@ -65,9 +65,16 @@ class Perm:
     def __init__(self, fn: Callable[[int], List[Tuple[int, int]]], name: str):
         self._fn = fn
         self.name = name
+        # Per-axis_size memo: the progress engine re-derives pairs/keys on
+        # every post and every transfer, so these are hot-path lookups.
+        self._pairs_memo: Dict[int, List[Tuple[int, int]]] = {}
+        self._key_memo: Dict[int, Tuple[Tuple[int, int], ...]] = {}
 
     def pairs_for(self, axis_size: int) -> List[Tuple[int, int]]:
-        return self._fn(axis_size)
+        pairs = self._pairs_memo.get(axis_size)
+        if pairs is None:
+            pairs = self._pairs_memo[axis_size] = self._fn(axis_size)
+        return pairs
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -85,7 +92,11 @@ class Perm:
         return Perm.pairs([(src, dst)])
 
     def key(self, axis_size: int) -> Tuple[Tuple[int, int], ...]:
-        return tuple(sorted(self.pairs_for(axis_size)))
+        key = self._key_memo.get(axis_size)
+        if key is None:
+            key = self._key_memo[axis_size] = tuple(
+                sorted(self.pairs_for(axis_size)))
+        return key
 
     def inverse(self) -> "Perm":
         fn = self._fn
@@ -230,6 +241,9 @@ class CounterCompletion(CompletionObject):
 # ---------------------------------------------------------------------------
 # Matching engine
 # ---------------------------------------------------------------------------
+_NO_KEY = object()          # sentinel: match key not yet computed
+
+
 @dataclasses.dataclass(eq=False)
 class PostedOp:
     """A pending posted operation (trace-time analogue of an LCI
@@ -246,6 +260,9 @@ class PostedOp:
     remote_comp: Optional[CompletionObject] = None
     op_name: str = "send"        # original op: send/put/get/am
     allow_aggregation: bool = True
+    # Match key, computed ONCE at post time by the matching engine the op
+    # is posted to (it depends on the engine's policy).  _NO_KEY until then.
+    match_key: Any = _NO_KEY
 
 
 class MatchingEngine(HasAttrs):
@@ -253,11 +270,19 @@ class MatchingEngine(HasAttrs):
 
     ``kind='map'`` matches on a key derived from the policy, regardless of
     posting order (the multithreaded-throughput implementation in the
-    paper).  ``kind='queue'`` only matches in FIFO order (in-order
-    receives): a send matches the *head* recv and vice versa; a key
-    mismatch at the heads leaves both pending (they may match after
-    reordering posts — which, trace-time, means user error surfaced by
-    ``flush``).
+    paper — LCI attributes its message-rate advantage to hash-table tag
+    matching, and this engine mirrors that: keyed hash buckets give O(1)
+    amortized post+match instead of the O(S×R) pending-list scan).
+    ``kind='queue'`` only matches in FIFO order (in-order receives): a
+    send matches the *head* recv and vice versa; a key mismatch at the
+    heads leaves both pending (they may match after reordering posts —
+    which, trace-time, means user error surfaced by ``flush``).
+
+    Map-mode invariant: after every ``post`` no matchable (send, recv)
+    pair remains pending, so a new op can only match the *oldest*
+    pending opposite op with the same key — which is exactly the head of
+    that key's bucket.  Custom ``key_fn``s returning unhashable keys
+    fall back to a linear bucket scan with identical semantics.
     """
 
     _ATTR_DEFAULTS = {"kind": "map", "policy": "rank_tag"}
@@ -276,63 +301,146 @@ class MatchingEngine(HasAttrs):
         if self._attrs["policy"] == "custom" and key_fn is None:
             raise ValueError("custom match policy requires key_fn")
         self._key_fn = key_fn
+        # queue kind: FIFO deques.  map kind: key -> deque buckets, plus
+        # an unhashable-key overflow list ((key, op) pairs, linear scan).
         self._pending_send: deque = deque()
         self._pending_recv: deque = deque()
+        self._send_buckets: Dict[Any, deque] = {}
+        self._recv_buckets: Dict[Any, deque] = {}
+        self._send_overflow: List[Tuple[Any, PostedOp]] = []
+        self._recv_overflow: List[Tuple[Any, PostedOp]] = []
+        self._n_send = 0
+        self._n_recv = 0
         self.n_matched = 0
 
     # -- key derivation ------------------------------------------------------
     def _key(self, op: PostedOp) -> Any:
+        """Derive (and cache on the op) the policy match key.  Computed
+        once at post time; the cached value is reused on every later
+        drain attempt instead of re-deriving perm keys in inner loops."""
+        if op.match_key is not _NO_KEY:
+            return op.match_key
         policy = self._attrs["policy"]
-        axis_size = op.device.axis_size
         if policy == "none":
-            return ()
-        if policy == "rank_only":
-            return op.perm.key(axis_size) if op.perm else ()
-        if policy == "tag_only":
-            return op.tag
-        if policy == "rank_tag":
-            return ((op.perm.key(axis_size) if op.perm else ()), op.tag)
-        return self._key_fn(op)
+            key = ()
+        elif policy == "rank_only":
+            key = op.perm.key(op.device.axis_size) if op.perm else ()
+        elif policy == "tag_only":
+            key = op.tag
+        elif policy == "rank_tag":
+            key = ((op.perm.key(op.device.axis_size) if op.perm else ()),
+                   op.tag)
+        else:
+            key = self._key_fn(op)
+        op.match_key = key
+        return key
 
     # -- posting ---------------------------------------------------------------
     def post(self, op: PostedOp) -> List[Tuple[PostedOp, PostedOp]]:
         """Post an op; return newly formed (send, recv) matches."""
-        if op.kind == "send":
-            self._pending_send.append(op)
-        else:
-            self._pending_recv.append(op)
-        return self._drain()
-
-    def _drain(self) -> List[Tuple[PostedOp, PostedOp]]:
-        matches: List[Tuple[PostedOp, PostedOp]] = []
         if self._attrs["kind"] == "queue":
-            while self._pending_send and self._pending_recv:
-                s, r = self._pending_send[0], self._pending_recv[0]
-                if self._key(s) != self._key(r):
+            if op.kind == "send":
+                self._pending_send.append(op)
+            else:
+                self._pending_recv.append(op)
+            return self._drain_queue()
+        return self._post_map(op)
+
+    def _post_map(self, op: PostedOp) -> List[Tuple[PostedOp, PostedOp]]:
+        key = self._key(op)
+        is_send = op.kind == "send"
+        other_buckets = self._recv_buckets if is_send else self._send_buckets
+        other_overflow = self._recv_overflow if is_send else self._send_overflow
+        try:
+            bucket = other_buckets.get(key)
+        except TypeError:                     # unhashable custom key
+            return self._post_map_unhashable(op, key)
+        peer: Optional[PostedOp] = None
+        if bucket:
+            peer = bucket.popleft()
+            if not bucket:
+                del other_buckets[key]
+        elif other_overflow:
+            # hashable key may still match an unhashable-keyed peer via ==
+            for i, (okey, oop) in enumerate(other_overflow):
+                if okey == key:
+                    peer = oop
+                    del other_overflow[i]
                     break
-                self._pending_send.popleft()
-                self._pending_recv.popleft()
-                matches.append((s, r))
-        else:  # map
-            changed = True
-            while changed:
-                changed = False
-                for s in list(self._pending_send):
-                    ks = self._key(s)
-                    for r in list(self._pending_recv):
-                        if ks == self._key(r):
-                            self._pending_send.remove(s)
-                            self._pending_recv.remove(r)
-                            matches.append((s, r))
-                            changed = True
-                            break
-                    if changed:
-                        break
+        if peer is None:
+            own = self._send_buckets if is_send else self._recv_buckets
+            own.setdefault(key, deque()).append(op)
+            if is_send:
+                self._n_send += 1
+            else:
+                self._n_recv += 1
+            return []
+        if is_send:
+            self._n_recv -= 1
+            match = (op, peer)
+        else:
+            self._n_send -= 1
+            match = (peer, op)
+        self.n_matched += 1
+        return [match]
+
+    def _post_map_unhashable(self, op: PostedOp,
+                             key: Any) -> List[Tuple[PostedOp, PostedOp]]:
+        is_send = op.kind == "send"
+        other_buckets = self._recv_buckets if is_send else self._send_buckets
+        other_overflow = self._recv_overflow if is_send else self._send_overflow
+        peer: Optional[PostedOp] = None
+        # oldest matching peer across bucketed and overflow pendings
+        best_seq = None
+        best_loc: Any = None
+        for bkey, bucket in other_buckets.items():
+            if bkey == key and bucket:
+                head = bucket[0]
+                if best_seq is None or head.seq < best_seq:
+                    best_seq, best_loc, peer = head.seq, ("b", bkey), head
+        for i, (okey, oop) in enumerate(other_overflow):
+            if okey == key and (best_seq is None or oop.seq < best_seq):
+                best_seq, best_loc, peer = oop.seq, ("o", i), oop
+        if peer is None:
+            own = self._send_overflow if is_send else self._recv_overflow
+            own.append((key, op))
+            if is_send:
+                self._n_send += 1
+            else:
+                self._n_recv += 1
+            return []
+        if best_loc[0] == "b":
+            bucket = other_buckets[best_loc[1]]
+            bucket.popleft()
+            if not bucket:
+                del other_buckets[best_loc[1]]
+        else:
+            del other_overflow[best_loc[1]]
+        if is_send:
+            self._n_recv -= 1
+            match = (op, peer)
+        else:
+            self._n_send -= 1
+            match = (peer, op)
+        self.n_matched += 1
+        return [match]
+
+    def _drain_queue(self) -> List[Tuple[PostedOp, PostedOp]]:
+        matches: List[Tuple[PostedOp, PostedOp]] = []
+        while self._pending_send and self._pending_recv:
+            s, r = self._pending_send[0], self._pending_recv[0]
+            if self._key(s) != self._key(r):
+                break
+            self._pending_send.popleft()
+            self._pending_recv.popleft()
+            matches.append((s, r))
         self.n_matched += len(matches)
         return matches
 
     def pending(self) -> Tuple[int, int]:
-        return len(self._pending_send), len(self._pending_recv)
+        if self._attrs["kind"] == "queue":
+            return len(self._pending_send), len(self._pending_recv)
+        return self._n_send, self._n_recv
 
 
 # ---------------------------------------------------------------------------
@@ -450,8 +558,19 @@ class Runtime:
             self.default_pool = PacketPool()
             self.default_engine = MatchingEngine()
             self.default_cq = CompletionQueue()
-        # (send, recv) matches waiting for a progress() call.
-        self._ready: List[Tuple[PostedOp, PostedOp]] = []
+        # (send, recv) matches waiting for a progress() call, ledgered
+        # per device so take_ready(device) is an O(1) dict pop instead of
+        # a quadratic filter over one global list.  A cross-device match
+        # (shared engine, different devices) is indexed under BOTH
+        # devices; entries are [match, taken] cells so whichever ledger
+        # is drained first claims the match.
+        self._ready: Dict[int, List[List[Any]]] = {}
+        self._n_pending = 0
+        # Aggregation-plan cache: (axis, perm-key, dtype-sig, shape-sig)
+        # -> concat/slice layout, reused across progress calls so
+        # steady-state loops don't re-derive pack/unpack plans.
+        self.agg_plans: Dict[Any, Any] = {}
+        self.plan_stats: Dict[str, int] = {"hits": 0, "misses": 0}
         self._rcomp_registry: Dict[int, CompletionObject] = {}
         self._rcomp_next = itertools.count(1)
         self._lock = threading.Lock()
@@ -478,20 +597,35 @@ class Runtime:
     # -- match ledger -----------------------------------------------------------
     def enqueue_matches(
             self, matches: List[Tuple[PostedOp, PostedOp]]) -> None:
-        self._ready.extend(matches)
+        for m in matches:
+            entry = [m, False]
+            d0 = id(m[0].device)
+            self._ready.setdefault(d0, []).append(entry)
+            d1 = id(m[1].device)
+            if d1 != d0:
+                self._ready.setdefault(d1, []).append(entry)
+            self._n_pending += 1
 
     def take_ready(self, device: Optional[Device] = None
                    ) -> List[Tuple[PostedOp, PostedOp]]:
+        out: List[Tuple[PostedOp, PostedOp]] = []
         if device is None:
-            out, self._ready = self._ready, []
-            return out
-        out = [m for m in self._ready
-               if m[0].device is device or m[1].device is device]
-        self._ready = [m for m in self._ready if m not in out]
+            for ledger in self._ready.values():
+                for entry in ledger:
+                    if not entry[1]:
+                        entry[1] = True
+                        out.append(entry[0])
+            self._ready.clear()
+        else:
+            for entry in self._ready.pop(id(device), ()):
+                if not entry[1]:
+                    entry[1] = True
+                    out.append(entry[0])
+        self._n_pending -= len(out)
         return out
 
     def pending_count(self) -> int:
-        return len(self._ready)
+        return self._n_pending
 
 
 _RUNTIME: Optional[Runtime] = None

@@ -186,6 +186,66 @@ def test_pool_sized_inflight_limit():
     assert ex.max_inflight == 3
 
 
+def test_executor_stats_meaningful_under_batched_retirement():
+    """Batched CQ drains must keep events_retired == events delivered
+    and backpressure_stalls counting real admission stalls."""
+    lcx.init()
+    ex = Executor(max_inflight=2, progress_every=1000)
+    n_tasks, n_puts = 5, 3
+
+    def maker(i):
+        def fn(ctx):
+            for j in range(n_puts):
+                ctx.put(jnp.float32(i * n_puts + j), None, tag=j)
+            return ctx.suspend(
+                lambda evs: sum(float(e.payload) for e in evs),
+                n_events=n_puts)
+        return fn
+
+    tasks = [ex.spawn(maker(i)) for i in range(n_tasks)]
+    stats = ex.run()
+    assert stats["events_retired"] == n_tasks * n_puts
+    assert stats["tasks_resumed"] == n_tasks
+    assert stats["backpressure_stalls"] > 0
+    # nothing ever failed to shrink the ledger, so no deferrals
+    assert stats["backpressure_deferrals"] == 0
+    expect = [sum(range(i * n_puts, (i + 1) * n_puts)) for i in range(n_tasks)]
+    assert [t.result for t in tasks] == [float(e) for e in expect]
+
+
+def test_adaptive_progress_backs_off_when_idle():
+    """Progress calls that retire nothing widen the posting interval;
+    a retirement snaps it back to the configured progress_every."""
+    lcx.init()
+    ex = Executor(progress_every=1)
+    # compute-only tasks: every interleaved progress retires nothing...
+    for i in range(6):
+        ex.spawn(lambda ctx: None)
+    ex.run()
+    assert ex.stats["progress_backoffs"] >= 1
+    assert ex._progress_interval > ex.progress_every
+
+    # ...but a communicating task resets the cadence
+    def talker(ctx):
+        ctx.put(jnp.float32(1.0), None)
+        return ctx.suspend(lambda ev: float(ev.payload))
+
+    t = ex.spawn(talker)
+    ex.run()
+    assert t.result == 1.0
+    assert ex._progress_interval == ex.progress_every
+
+
+def test_adaptive_progress_can_be_disabled():
+    lcx.init()
+    ex = Executor(progress_every=1, adaptive_progress=False)
+    for i in range(4):
+        ex.spawn(lambda ctx: None)
+    ex.run()
+    assert ex.stats["progress_backoffs"] == 0
+    assert ex._progress_interval == ex.progress_every
+
+
 # ---------------------------------------------------------------------------
 # Completion objects under executor load (satellite)
 # ---------------------------------------------------------------------------

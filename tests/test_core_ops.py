@@ -205,3 +205,119 @@ def test_shape_mismatch_raises():
             lcx.progress()
         return x
     ranked(body)
+
+
+def test_shape_mismatch_raises_on_aggregated_path():
+    """The aggregated path must enforce the same send/recv shape check
+    as the single-transfer path — aggregation can't silently reshape."""
+    def body(x):
+        lcx.init()
+        d = dev()
+        p = lcx.Perm.shift(1)
+        s1 = lcx.Synchronizer(threshold=2)
+        s2 = lcx.Synchronizer(threshold=2)
+        # two eager same-perm pairs -> one aggregated group; the second
+        # pair's recv shape is wrong
+        lcx.send_x(jnp.zeros(3)).perm(p).tag(0).comp(s1).device(d)()
+        lcx.recv_x(jnp.zeros(3)).perm(p).tag(0).comp(s1).device(d)()
+        lcx.send_x(jnp.zeros(4)).perm(p).tag(1).comp(s2).device(d)()
+        lcx.recv_x(jnp.zeros(6)).perm(p).tag(1).comp(s2).device(d)()
+        with pytest.raises(ValueError):
+            lcx.progress()
+        return x
+    ranked(body)
+
+
+# -- progress fast path: plan cache, byte packing, transfer accounting -------
+def test_mixed_dtype_eager_messages_share_one_transfer():
+    """Byte-view packing: eager messages with different (bitcast-safe)
+    dtypes on one perm ride a single aggregated transfer."""
+    def body(x):
+        lcx.init()
+        d = dev()
+        pool = lcx.PacketPool()
+        sf = lcx.Synchronizer()
+        si = lcx.Synchronizer()
+        lcx.put_x(x).perm(lcx.Perm.shift(1)).remote_comp(sf).device(d)()
+        lcx.put_x(jnp.int32(5)).perm(lcx.Perm.shift(1)).remote_comp(si) \
+            .device(d)()
+        n = lcx.progress_x().pool(pool)()
+        assert n == 1
+        assert pool.stats["aggregated_transfers"] == 1
+        assert pool.stats["eager_msgs"] == 2
+        vi = si.wait()[0].payload
+        assert vi.dtype == jnp.int32
+        return sf.wait()[0].payload + vi.astype(jnp.float32)
+    out = ranked(body)
+    np.testing.assert_allclose(out, np.array([3.0, 0.0, 1.0, 2.0]) + 5.0)
+
+
+def test_aggregation_plan_cached_across_progress_calls():
+    """Steady-state loops reuse the concat/slice plan instead of
+    re-deriving it on every progress call."""
+    def body(x):
+        lcx.init()
+        d = dev()
+        pool = lcx.PacketPool()
+        outs = []
+        for step in range(3):
+            s1, s2 = lcx.Synchronizer(), lcx.Synchronizer()
+            lcx.put_x(x + step).perm(lcx.Perm.shift(1)) \
+                .remote_comp(s1).device(d)()
+            lcx.put_x(x * step).perm(lcx.Perm.shift(1)) \
+                .remote_comp(s2).device(d)()
+            lcx.progress_x().pool(pool)()
+            outs.append(s1.wait()[0].payload + s2.wait()[0].payload)
+        stats = lcx.runtime().plan_stats
+        assert stats["misses"] == 1 and stats["hits"] == 2
+        return sum(outs)
+    out = ranked(body)
+    # neighbour v: sum over steps of (v+step) + v*step = 3v+3 + 3v
+    v = np.array([3.0, 0.0, 1.0, 2.0])
+    np.testing.assert_allclose(out, 6 * v + 3)
+
+
+def test_max_transfers_counts_actual_transfers_not_groups():
+    """Loopback deliveries are zero transfers and never consume the
+    max_transfers budget; an aggregated group costs exactly one."""
+    def body(x):
+        lcx.init()
+        loop_dev = lcx.Device()           # loopback: no transfer
+        axis_dev = dev()
+        s_loop = lcx.Synchronizer()
+        s_axis = lcx.Synchronizer()
+        lcx.put_x(x).remote_comp(s_loop).device(loop_dev)()
+        lcx.put_x(x).perm(lcx.Perm.shift(1)).remote_comp(s_axis) \
+            .device(axis_dev)()
+        # budget 1: the loopback match is free, the axis put fits
+        n = lcx.progress_x().max_transfers(1)()
+        assert n == 1
+        assert s_loop.ready() and s_axis.ready()
+        assert lcx.runtime().pending_count() == 0
+        return s_axis.wait()[0].payload + s_loop.wait()[0].payload
+    out = ranked(body)
+    v = np.array([3.0, 0.0, 1.0, 2.0])
+    np.testing.assert_allclose(out, v + np.arange(4.0))
+
+
+def test_pool_msg_stats_not_double_counted_across_deferred_progress():
+    """Matches re-enqueued by the max_transfers budget must not bump
+    eager/rendezvous counters again when they finally execute."""
+    def body(x):
+        lcx.init()
+        d = dev()
+        pool = lcx.PacketPool()
+        s1, s2 = lcx.Synchronizer(), lcx.Synchronizer()
+        lcx.put_x(x).perm(lcx.Perm.shift(1)).remote_comp(s1).device(d) \
+            .allow_aggregation(False)()
+        lcx.put_x(x).perm(lcx.Perm.shift(2)).remote_comp(s2).device(d) \
+            .allow_aggregation(False)()
+        n1 = lcx.progress_x().pool(pool).max_transfers(1)()
+        assert n1 == 1
+        assert pool.stats["rendezvous_msgs"] == 1   # deferred one uncounted
+        n2 = lcx.progress_x().pool(pool)()
+        assert n2 == 1
+        assert pool.stats["rendezvous_msgs"] == 2   # not 3
+        assert pool.stats["raw_transfers"] == 2
+        return s1.wait()[0].payload + s2.wait()[0].payload
+    ranked(body)

@@ -172,6 +172,169 @@ def test_rank_tag_policy_uses_perm():
                             device=dev))) == 1
 
 
+# -- keyed fast path vs reference scan (regression for the O(1) rewrite) -----
+class _RefScanEngine:
+    """The pre-optimization O(S×R) matching semantics, kept as the test
+    oracle: one pending list per side, full rescan after every post."""
+
+    def __init__(self, kind, policy, key_fn=None):
+        self.kind, self.policy, self.key_fn = kind, policy, key_fn
+        self.sends, self.recvs = [], []
+
+    def _key(self, op):
+        if self.policy == "none":
+            return ()
+        if self.policy == "rank_only":
+            return op.perm.key(op.device.axis_size) if op.perm else ()
+        if self.policy == "tag_only":
+            return op.tag
+        if self.policy == "rank_tag":
+            return ((op.perm.key(op.device.axis_size) if op.perm else ()),
+                    op.tag)
+        return self.key_fn(op)
+
+    def post(self, op):
+        (self.sends if op.kind == "send" else self.recvs).append(op)
+        matches = []
+        if self.kind == "queue":
+            while self.sends and self.recvs:
+                s, r = self.sends[0], self.recvs[0]
+                if self._key(s) != self._key(r):
+                    break
+                matches.append((self.sends.pop(0), self.recvs.pop(0)))
+            return matches
+        changed = True
+        while changed:
+            changed = False
+            for s in list(self.sends):
+                ks = self._key(s)
+                for r in list(self.recvs):
+                    if ks == self._key(r):
+                        self.sends.remove(s)
+                        self.recvs.remove(r)
+                        matches.append((s, r))
+                        changed = True
+                        break
+                if changed:
+                    break
+        return matches
+
+
+def _random_op_stream(rng, n, device):
+    perms = [None, lcx.Perm.shift(1), lcx.Perm.shift(2),
+             lcx.Perm.pairs([(0, 1)]),
+             lcx.Perm.pairs([(1, 2), (0, 1)])]
+    ops = []
+    for seq in range(n):
+        ops.append(PostedOp(
+            kind=rng.choice(("send", "recv")), buffer=None,
+            perm=rng.choice(perms), tag=rng.randrange(4), comp=None,
+            device=device, seq=seq))
+    return ops
+
+
+@pytest.mark.parametrize("kind", ["map", "queue"])
+@pytest.mark.parametrize("policy", ["none", "rank_only", "tag_only",
+                                    "rank_tag", "custom"])
+def test_keyed_matching_identical_to_reference_scan(kind, policy):
+    """The hash-bucket fast path must reproduce the old scan's pairings
+    and match orderings exactly, for every kind x policy."""
+    import random
+    key_fn = (lambda op: op.tag % 3) if policy == "custom" else None
+    rng = random.Random(f"{kind}/{policy}")
+    dev = lcx.Device(axis="x", mesh_shape={"x": 4})
+    ops = _random_op_stream(rng, 400, dev)
+    ref = _RefScanEngine(kind, policy, key_fn)
+    eng = lcx.MatchingEngine(kind=kind, policy=policy, key_fn=key_fn)
+    for op in ops:
+        ref_matches = [(s.seq, r.seq) for s, r in ref.post(op)]
+        got = [(s.seq, r.seq) for s, r in eng.post(op)]
+        assert got == ref_matches, (kind, policy, op.seq)
+    assert eng.pending() == (len(ref.sends), len(ref.recvs))
+
+
+def test_map_engine_unhashable_custom_keys():
+    """Custom key_fns returning unhashable keys fall back to the linear
+    overflow path with the same oldest-first semantics."""
+    eng = lcx.MatchingEngine(kind="map", policy="custom",
+                             key_fn=lambda op: [op.tag % 2])
+    eng.post(_op("send", tag=0, seq=0))
+    eng.post(_op("send", tag=2, seq=1))
+    assert eng.pending() == (2, 0)
+    m = eng.post(_op("recv", tag=4, seq=2))
+    # matches the OLDEST pending send with an equal key
+    assert len(m) == 1 and m[0][0].seq == 0
+    m2 = eng.post(_op("recv", tag=6, seq=3))
+    assert len(m2) == 1 and m2[0][0].seq == 1
+    assert eng.pending() == (0, 0)
+
+
+def test_match_key_computed_once_per_op():
+    calls = []
+
+    def key_fn(op):
+        calls.append(op.seq)
+        return op.tag
+
+    eng = lcx.MatchingEngine(kind="map", policy="custom", key_fn=key_fn)
+    for i in range(8):
+        eng.post(_op("send", tag=i, seq=i))
+    for i in range(8):
+        eng.post(_op("recv", tag=i, seq=8 + i))
+    # one key derivation per posted op — never recomputed in a drain loop
+    assert len(calls) == 16
+
+
+def test_perm_key_memoized_per_axis_size():
+    calls = []
+    p = lcx.Perm(lambda n: calls.append(n) or [(i, (i + 1) % n)
+                                               for i in range(n)], "probe")
+    assert p.key(4) == p.key(4) and len(calls) == 1
+    p.key(8)
+    assert len(calls) == 2
+    assert p.pairs_for(4) is p.pairs_for(4)     # memoized list reused
+
+
+# -- per-device transfer ledgers ---------------------------------------------
+def test_take_ready_device_isolation_two_devices_one_axis():
+    """Two devices on one axis progress independently: draining one
+    device's ledger must not disturb the other's (LCI device-per-thread
+    isolation)."""
+    rt = lcx.runtime()
+    d1 = lcx.Device(axis="x", mesh_shape={"x": 4})
+    d2 = lcx.Device(axis="x", mesh_shape={"x": 4})
+    m1 = (_op("send", tag=1, device=d1), _op("recv", tag=1, device=d1))
+    m2 = (_op("send", tag=2, device=d2), _op("recv", tag=2, device=d2))
+    m3 = (_op("send", tag=3, device=d1), _op("recv", tag=3, device=d1))
+    rt.enqueue_matches([m1, m2, m3])
+    assert rt.pending_count() == 3
+    got1 = rt.take_ready(d1)
+    assert got1 == [m1, m3]
+    assert rt.pending_count() == 1
+    # d2's traffic untouched; a second drain of d1 is empty
+    assert rt.take_ready(d1) == []
+    assert rt.take_ready(d2) == [m2]
+    assert rt.pending_count() == 0
+
+
+def test_take_ready_cross_device_match_claimed_once():
+    """A match whose send and recv sit on different devices (shared
+    engine) is claimed by whichever device drains first — and only once."""
+    rt = lcx.runtime()
+    d1, d2 = lcx.Device(), lcx.Device()
+    m = (_op("send", tag=1, device=d1), _op("recv", tag=1, device=d2))
+    rt.enqueue_matches([m])
+    assert rt.pending_count() == 1
+    assert rt.take_ready(d1) == [m]
+    assert rt.take_ready(d2) == []
+    assert rt.pending_count() == 0
+    # drain-all also sees each match exactly once
+    rt.enqueue_matches([m])
+    assert rt.take_ready() == [m]
+    assert rt.take_ready() == []
+    assert rt.pending_count() == 0
+
+
 # -- packet pool -------------------------------------------------------------
 def test_pool_eager_threshold():
     pool = lcx.PacketPool(packet_size=100)
