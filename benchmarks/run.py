@@ -9,6 +9,7 @@ Sections:
 3. lcx_collectives   — LCX ring/pairwise vs native XLA collectives
 4. moe_dispatch      — EP a2a dispatch throughput (LCX a2a backends)
 5. kernels_bench     — Pallas kernels vs oracles
+6. chaosbench        — seeded fault-injection sweep (convergence)
 CSV outputs land in results/.
 """
 import argparse
@@ -62,6 +63,12 @@ def main() -> None:
     print("=" * 72)
     import kernels_bench
     kernels_bench.main(out_csv="results/kernels.csv")
+
+    print("=" * 72)
+    print("5. chaos sweep (seeded fault injection must converge)")
+    print("=" * 72)
+    import chaosbench
+    chaosbench.main(["--smoke"] if args.fast else [])
 
     print("benchmarks complete; CSVs in results/")
 

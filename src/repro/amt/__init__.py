@@ -17,13 +17,14 @@ through an executor.  See ``docs/amt.md`` for the executor ↔
 completion-object contract.
 """
 from .task import Task, TaskGraph, TaskState
-from .executor import Executor, PENDING, TaskContext
-from .remote import (RemoteSpawner, clear_task_handlers,
+from .executor import (DependencyError, Executor, PENDING, TaskContext,
+                       TaskStatus)
+from .remote import (RemoteFailure, RemoteSpawner, clear_task_handlers,
                      register_task_handler, task_handler)
 
 __all__ = [
     "Task", "TaskGraph", "TaskState",
-    "Executor", "PENDING", "TaskContext",
-    "RemoteSpawner", "register_task_handler", "task_handler",
-    "clear_task_handlers",
+    "DependencyError", "Executor", "PENDING", "TaskContext", "TaskStatus",
+    "RemoteFailure", "RemoteSpawner", "register_task_handler",
+    "task_handler", "clear_task_handlers",
 ]

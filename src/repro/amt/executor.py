@@ -29,6 +29,7 @@ analogue of LCI's packet-pool exhaustion pushing back on senders.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -48,6 +49,26 @@ class _Pending:
 PENDING = _Pending()
 
 
+@dataclasses.dataclass
+class TaskStatus:
+    """Per-task fault record kept by the executor in graceful mode.
+
+    ``state`` is ``"ok"`` (never failed), ``"retrying"`` (failed but
+    requeued with backoff), ``"failed"`` (retries exhausted, in the
+    dead-letter list), or ``"cascade"`` (a dependency failed, so the
+    task can never run).
+    """
+
+    task: Task
+    attempts: int = 0
+    state: str = "ok"
+    error: Optional[BaseException] = None
+
+
+class DependencyError(RuntimeError):
+    """Raised into a task's error slot when a dependency dead-letters."""
+
+
 class TaskContext:
     """Handed to every task body; the task's view of the executor."""
 
@@ -58,13 +79,15 @@ class TaskContext:
     # -- communication posting ----------------------------------------------
     def put(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
             tag: int = 0, device: Optional[lcx.Device] = None,
-            allow_aggregation: bool = True) -> None:
+            allow_aggregation: bool = True, timeout: Optional[int] = None,
+            max_retries: int = 0) -> None:
         """Post a one-sided put whose *remote* completion retires through
         the executor (the receiving side's suspended task resumes)."""
         dev = device or self.executor.device
         lcx.put_x(buffer).perm(perm).tag(tag) \
             .remote_comp(self.executor.cq).ctx(self.task) \
-            .device(dev).allow_aggregation(allow_aggregation)()
+            .device(dev).allow_aggregation(allow_aggregation) \
+            .timeout(timeout).max_retries(max_retries)()
         self.executor._note_post()
 
     def am(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
@@ -80,17 +103,21 @@ class TaskContext:
         self.executor._note_post()
 
     def send(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
-             tag: int = 0, device: Optional[lcx.Device] = None) -> None:
+             tag: int = 0, device: Optional[lcx.Device] = None,
+             timeout: Optional[int] = None, max_retries: int = 0) -> None:
         dev = device or self.executor.device
         lcx.send_x(buffer).perm(perm).tag(tag).comp(self.executor.cq) \
-            .ctx(self.task).device(dev)()
+            .ctx(self.task).device(dev) \
+            .timeout(timeout).max_retries(max_retries)()
         self.executor._note_post()
 
     def recv(self, like: Any, perm: Optional[lcx.Perm] = None, *,
-             tag: int = 0, device: Optional[lcx.Device] = None) -> None:
+             tag: int = 0, device: Optional[lcx.Device] = None,
+             timeout: Optional[int] = None, max_retries: int = 0) -> None:
         dev = device or self.executor.device
         lcx.recv_x(like).perm(perm).tag(tag).comp(self.executor.cq) \
-            .ctx(self.task).device(dev)()
+            .ctx(self.task).device(dev) \
+            .timeout(timeout).max_retries(max_retries)()
         self.executor._note_post()
 
     # -- suspension ----------------------------------------------------------
@@ -128,8 +155,22 @@ class Executor:
                  adaptive_progress: bool = True,
                  max_inflight: Optional[int] = None,
                  cq: Optional[lcx.CompletionQueue] = None,
+                 fail_fast: bool = True,
+                 max_task_retries: int = 0,
+                 task_retry_backoff: int = 1,
                  name: str = "amt") -> None:
         self.name = name
+        # Graceful degradation: with fail_fast=False a task exception is
+        # recorded in ``task_status`` and the task is retried with
+        # exponential backoff up to ``max_task_retries`` times, then
+        # dead-lettered (its dependents cascade-fail) — the loop keeps
+        # running instead of tearing down.
+        self.fail_fast = fail_fast
+        self.max_task_retries = max_task_retries
+        self.task_retry_backoff = max(1, task_retry_backoff)
+        self.dead_letter: List[Task] = []
+        self.task_status: Dict[int, TaskStatus] = {}
+        self._deferred: List[Tuple[int, int, Task]] = []  # (cycle, tie, task)
         self.device = device if device is not None else lcx.Device()
         self.pool = pool
         self.graph = graph or TaskGraph()
@@ -152,7 +193,8 @@ class Executor:
             "tasks_run": 0, "tasks_resumed": 0, "progress_calls": 0,
             "events_retired": 0, "backpressure_stalls": 0,
             "backpressure_deferrals": 0, "progress_backoffs": 0,
-            "watch_fires": 0, "cycles": 0,
+            "watch_fires": 0, "cycles": 0, "tasks_failed": 0,
+            "task_retries": 0,
         }
         self._heap: List[Tuple[int, int, Task]] = []
         self._tie = itertools.count()
@@ -209,6 +251,7 @@ class Executor:
         for _ in range(max_cycles):
             self.stats["cycles"] += 1
             before = self._activity
+            self._release_deferred()
             while self._heap:
                 deferred = False
                 while lcx.runtime().pending_count() >= self.max_inflight:
@@ -236,6 +279,11 @@ class Executor:
             if not self.graph.unfinished():
                 break
             if self._activity == before:
+                if self._deferred or lcx.runtime().has_inflight():
+                    # Not a deadlock: backed-off task retries and/or comm
+                    # retries/timeouts are still pending — keep driving
+                    # progress so their tick deadlines can elapse.
+                    continue
                 stuck = [t for t in self.graph.tasks.values()
                          if t.state in (TaskState.PENDING, TaskState.READY,
                                         TaskState.BLOCKED)]
@@ -268,14 +316,68 @@ class Executor:
         try:
             out = task.fn(ctx)
         except BaseException as e:
-            self.graph.fail(task, e)
-            raise
+            if self.fail_fast or not isinstance(e, Exception):
+                self.graph.fail(task, e)
+                raise
+            self._handle_failure(task, e)
+            return
         self.stats["tasks_run"] += 1
         self._activity += 1
         if out is PENDING:
             task.state = TaskState.BLOCKED
         else:
             self._retire(task, out)
+
+    # -- graceful degradation ---------------------------------------------------
+    def status_of(self, task: Task) -> TaskStatus:
+        st = self.task_status.get(task.tid)
+        if st is None:
+            st = self.task_status[task.tid] = TaskStatus(task)
+        return st
+
+    def _handle_failure(self, task: Task, error: Exception) -> None:
+        st = self.status_of(task)
+        st.attempts += 1
+        st.error = error
+        self._activity += 1
+        if st.attempts <= self.max_task_retries:
+            st.state = "retrying"
+            self.stats["task_retries"] += 1
+            delay = self.task_retry_backoff * (1 << (st.attempts - 1))
+            task.state = TaskState.PENDING
+            heapq.heappush(self._deferred,
+                           (self.stats["cycles"] + delay, next(self._tie),
+                            task))
+            return
+        st.state = "failed"
+        self.dead_letter.append(task)
+        self._fail_task(task, error)
+
+    def _fail_task(self, task: Task, error: BaseException) -> None:
+        """Settle ``task`` as FAILED and cascade to dependents that can
+        now never run (their error records why)."""
+        if task.state in (TaskState.DONE, TaskState.FAILED):
+            return
+        self.graph.fail(task, error)
+        self.stats["tasks_failed"] += 1
+        self._activity += 1
+        for dep in task.dependents:
+            if dep.state in (TaskState.DONE, TaskState.FAILED):
+                continue
+            st = self.status_of(dep)
+            st.state = "cascade"
+            cascade = DependencyError(
+                f"dependency {task.name!r} failed: {error!r}")
+            st.error = cascade
+            self._fail_task(dep, cascade)
+
+    def _release_deferred(self) -> None:
+        while self._deferred and self._deferred[0][0] <= self.stats["cycles"]:
+            _, _, task = heapq.heappop(self._deferred)
+            if task.state is TaskState.PENDING:
+                task.state = TaskState.READY
+                self._push(task)
+                self._activity += 1
 
     def _retire(self, task: Task, result: Any) -> None:
         task.result = result

@@ -17,8 +17,11 @@ therefore names the same logical spawn on sender and receiver.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
 
 import repro.core as lcx
 
@@ -26,6 +29,26 @@ from .executor import Executor
 from .task import Task
 
 _HANDLERS: Dict[str, Callable[[Any], Any]] = {}
+
+
+@dataclasses.dataclass
+class RemoteFailure:
+    """Error result of a remote spawn — the reply-side analogue of a
+    non-ok :class:`~repro.core.resources.ErrorCode`.
+
+    Delivered as the promise's *value* (never raised from inside
+    ``progress()``): an unregistered handler or a handler that raised on
+    the peer resolves the spawner's promise with one of these instead of
+    wedging it forever.
+    """
+
+    handler: str
+    status: str            # "unknown_handler" | "handler_error"
+    message: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return False
 
 
 def register_task_handler(name: str, fn: Callable[[Any], Any]) -> str:
@@ -59,6 +82,10 @@ class RemoteSpawner:
         self._reply_fh = lcx.FunctionHandler(self._deliver_reply)
         self._reply_ids = itertools.count(1)
         self._pending_replies: Dict[int, Task] = {}
+        self.stats: Dict[str, int] = {
+            "unknown_handlers": 0, "handler_errors": 0,
+            "orphan_replies": 0,
+        }
 
     # -- sender side -----------------------------------------------------------
     def spawn(self, name: str, payload: Any, perm: lcx.Perm, *,
@@ -83,13 +110,39 @@ class RemoteSpawner:
         return promise
 
     # -- receiver side (both run during lcx.progress) ---------------------------
+    def _reply_error(self, ctx: Any, info: Dict[str, Any], status: str,
+                     message: str) -> RemoteFailure:
+        """Ship an error-status reply (dummy payload, the error rides in
+        the trace-time context) so the spawner's promise resolves with a
+        :class:`RemoteFailure` instead of hanging."""
+        failure = RemoteFailure(handler=info["handler"], status=status,
+                                message=message)
+        if info["reply_id"]:
+            lcx.am_x(jnp.zeros(())).perm(info["perm"].inverse()) \
+                .remote_comp(self._reply_fh) \
+                .ctx({"reply_id": info["reply_id"], "status": status,
+                      "error": message, "handler": info["handler"]}) \
+                .device(self.device)()
+            ctx.executor._note_post()
+        return failure
+
     def _deliver(self, ev: lcx.Event) -> Task:
         info = ev.context
-        fn = _HANDLERS[info["handler"]]
 
         def run_remote(ctx: Any, _payload: Any = ev.payload,
                        _info: Dict[str, Any] = info) -> Any:
-            result = fn(_payload)
+            fn = _HANDLERS.get(_info["handler"])
+            if fn is None:
+                self.stats["unknown_handlers"] += 1
+                return self._reply_error(
+                    ctx, _info, "unknown_handler",
+                    f"no task handler registered as {_info['handler']!r}")
+            try:
+                result = fn(_payload)
+            except Exception as e:
+                self.stats["handler_errors"] += 1
+                return self._reply_error(ctx, _info, "handler_error",
+                                         f"{type(e).__name__}: {e}")
             if _info["reply_id"]:
                 lcx.am_x(result).perm(_info["perm"].inverse()) \
                     .remote_comp(self._reply_fh) \
@@ -103,5 +156,16 @@ class RemoteSpawner:
             name=f"remote:{info['handler']}")
 
     def _deliver_reply(self, ev: lcx.Event) -> None:
-        promise = self._pending_replies.pop(ev.context["reply_id"])
-        self.executor.resolve_promise(promise, ev.payload)
+        info = ev.context
+        promise = self._pending_replies.pop(info["reply_id"], None)
+        if promise is None:
+            # duplicate / late reply (e.g. FaultyTransport duplication)
+            self.stats["orphan_replies"] += 1
+            return
+        if info.get("status"):
+            self.executor.resolve_promise(
+                promise, RemoteFailure(handler=info.get("handler", "?"),
+                                       status=info["status"],
+                                       message=info.get("error", "")))
+        else:
+            self.executor.resolve_promise(promise, ev.payload)

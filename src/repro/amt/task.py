@@ -145,6 +145,8 @@ class TaskGraph:
         return unblocked
 
     def fail(self, task: Task, error: BaseException) -> None:
+        if task.state in (TaskState.FAILED, TaskState.DONE):
+            return  # already settled (e.g. cascade hit it twice)
         task.state = TaskState.FAILED
         task.error = error
         self._n_unfinished -= 1

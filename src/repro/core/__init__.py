@@ -29,15 +29,17 @@ executor ↔ completion-object contract; ``repro.parallel.pipeline`` and
 """
 from .flex import FlexOp, REQUIRED, plain
 from .attr import (get_global_attr, reset_global_attrs, set_global_attr)
-from .resources import (CompletionObject, CompletionQueue, CounterCompletion,
-                        Device, Event, FunctionHandler, MatchingEngine,
-                        MemoryRegion, PacketPool, Perm, PostedOp,
-                        Synchronizer, IMMEDIATE_RCOMP_BITS,
+from .resources import (CompletionError, CompletionObject, CompletionQueue,
+                        CounterCompletion, Device, ErrorCode, Event,
+                        FaultPolicy, FaultyTransport, FunctionHandler,
+                        MatchingEngine, MemoryRegion, PacketPool, Perm,
+                        PostedOp, Synchronizer, IMMEDIATE_RCOMP_BITS,
                         IMMEDIATE_TAG_BITS, MAX_RCOMP_BITS, MAX_TAG_BITS,
-                        finalize, init, runtime)
-from .ops import (PostHandle, am, am_x, get, get_x, progress, progress_x,
-                  put, put_x, recv, recv_x, register_memory, register_rcomp,
-                  send, send_x, sendrecv)
+                        finalize, init, install_transport, runtime,
+                        signal_error)
+from .ops import (PostHandle, am, am_x, cancel, get, get_x, progress,
+                  progress_x, put, put_x, recv, recv_x, register_memory,
+                  register_rcomp, send, send_x, sendrecv)
 from .collectives import (all_gather, all_gather_x, all_reduce, all_reduce_x,
                           all_to_all, all_to_all_x, barrier, broadcast,
                           broadcast_x, reduce_scatter, reduce_scatter_x)
@@ -45,14 +47,16 @@ from .collectives import (all_gather, all_gather_x, all_reduce, all_reduce_x,
 __all__ = [
     "FlexOp", "REQUIRED", "plain",
     "get_global_attr", "set_global_attr", "reset_global_attrs",
-    "CompletionObject", "CompletionQueue", "CounterCompletion", "Device",
-    "Event", "FunctionHandler", "MatchingEngine", "MemoryRegion",
+    "CompletionError", "CompletionObject", "CompletionQueue",
+    "CounterCompletion", "Device", "ErrorCode", "Event", "FaultPolicy",
+    "FaultyTransport", "FunctionHandler", "MatchingEngine", "MemoryRegion",
     "PacketPool", "Perm", "PostedOp", "Synchronizer",
     "IMMEDIATE_RCOMP_BITS", "IMMEDIATE_TAG_BITS", "MAX_RCOMP_BITS",
-    "MAX_TAG_BITS", "finalize", "init", "runtime",
-    "PostHandle", "am", "am_x", "get", "get_x", "progress", "progress_x",
-    "put", "put_x", "recv", "recv_x", "register_memory", "register_rcomp",
-    "send", "send_x", "sendrecv",
+    "MAX_TAG_BITS", "finalize", "init", "install_transport", "runtime",
+    "signal_error",
+    "PostHandle", "am", "am_x", "cancel", "get", "get_x", "progress",
+    "progress_x", "put", "put_x", "recv", "recv_x", "register_memory",
+    "register_rcomp", "send", "send_x", "sendrecv",
     "all_gather", "all_gather_x", "all_reduce", "all_reduce_x",
     "all_to_all", "all_to_all_x", "barrier", "broadcast", "broadcast_x",
     "reduce_scatter", "reduce_scatter_x",

@@ -22,11 +22,12 @@ import numpy as np
 from jax import lax
 
 from .flex import FlexOp, plain
-from .resources import (CompletionObject, CompletionQueue, Device, Event,
-                        FunctionHandler, MatchingEngine, MemoryRegion,
-                        PacketPool, Perm, PostedOp, Synchronizer,
-                        IMMEDIATE_RCOMP_BITS, IMMEDIATE_TAG_BITS,
-                        MAX_RCOMP_BITS, MAX_TAG_BITS, runtime)
+from .resources import (CompletionObject, CompletionQueue, Device, ErrorCode,
+                        Event, FaultyTransport, FunctionHandler,
+                        MatchingEngine, MemoryRegion, PacketPool, Perm,
+                        PostedOp, Synchronizer, IMMEDIATE_RCOMP_BITS,
+                        IMMEDIATE_TAG_BITS, MAX_RCOMP_BITS, MAX_TAG_BITS,
+                        runtime, signal_error)
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +81,17 @@ class PostHandle:
     def payload(self) -> Any:
         return self.wait()[0].payload
 
+    @property
+    def status(self) -> str:
+        """Lifecycle state of the posted op: pending/matched/done or the
+        terminal error-code value (cancelled/timeout/fatal/retry)."""
+        return self.posted.state
+
+    def cancel(self) -> bool:
+        """Retire the op if it is still pending in its matching engine;
+        signals a ``cancelled`` completion.  See :func:`cancel`."""
+        return cancel(self)
+
 
 # ---------------------------------------------------------------------------
 # send / recv (two-sided, matched)
@@ -93,7 +105,8 @@ class send_x(FlexOp):
 
     _positional = ("buffer",)
     _optional = dict(perm=None, tag=0, comp=None, device=None,
-                     matching_engine=None, ctx=None, allow_aggregation=True)
+                     matching_engine=None, ctx=None, allow_aggregation=True,
+                     timeout=None, max_retries=0)
 
     def _invoke(self) -> PostHandle:
         buf = _as_array(self.arg("buffer"))
@@ -106,8 +119,11 @@ class send_x(FlexOp):
                       tag=tag, comp=comp, device=dev,
                       seq=runtime().next_seq(),
                       context=self.arg_or("ctx", None), op_name="send",
-                      allow_aggregation=self.arg_or("allow_aggregation", True))
+                      allow_aggregation=self.arg_or("allow_aggregation", True),
+                      timeout=self.arg_or("timeout", None),
+                      max_retries=self.arg_or("max_retries", 0))
         dev.stats["posted"] += 1
+        runtime().watch_deadline(op)
         runtime().enqueue_matches(eng.post(op))
         return PostHandle(comp=comp, posted=op)
 
@@ -118,7 +134,8 @@ class recv_x(FlexOp):
 
     _positional = ("like",)
     _optional = dict(perm=None, tag=0, comp=None, device=None,
-                     matching_engine=None, ctx=None)
+                     matching_engine=None, ctx=None, timeout=None,
+                     max_retries=0)
 
     def _invoke(self) -> PostHandle:
         like = self.arg("like")
@@ -130,8 +147,11 @@ class recv_x(FlexOp):
         op = PostedOp(kind="recv", buffer=like,
                       perm=self.arg_or("perm", None), tag=tag, comp=comp,
                       device=dev, seq=runtime().next_seq(),
-                      context=self.arg_or("ctx", None), op_name="recv")
+                      context=self.arg_or("ctx", None), op_name="recv",
+                      timeout=self.arg_or("timeout", None),
+                      max_retries=self.arg_or("max_retries", 0))
         dev.stats["posted"] += 1
+        runtime().watch_deadline(op)
         runtime().enqueue_matches(eng.post(op))
         return PostHandle(comp=comp, posted=op)
 
@@ -147,7 +167,8 @@ class put_x(FlexOp):
 
     _positional = ("buffer",)
     _optional = dict(perm=None, tag=0, comp=None, remote_comp=None,
-                     device=None, ctx=None, allow_aggregation=True)
+                     device=None, ctx=None, allow_aggregation=True,
+                     timeout=None, max_retries=0)
 
     _OP = "put"
 
@@ -187,11 +208,16 @@ class put_x(FlexOp):
                         context=self.arg_or("ctx", None), op_name=self._OP,
                         remote_comp=rcomp_obj,
                         allow_aggregation=self.arg_or(
-                            "allow_aggregation", True))
+                            "allow_aggregation", True),
+                        state="matched",
+                        timeout=self.arg_or("timeout", None),
+                        max_retries=self.arg_or("max_retries", 0))
         recv = PostedOp(kind="recv", buffer=buf, perm=send.perm, tag=tag,
                         comp=rcomp_obj, device=dev, seq=send.seq,
-                        context=self.arg_or("ctx", None), op_name=self._OP)
+                        context=self.arg_or("ctx", None), op_name=self._OP,
+                        state="matched")
         dev.stats["posted"] += 1
+        runtime().watch_deadline(send)
         runtime().enqueue_matches([(send, recv)])
         return PostHandle(comp=comp, posted=send)
 
@@ -215,7 +241,8 @@ class get_x(FlexOp):
     peer defined by ``perm`` (a src->dst pattern read *backwards*)."""
 
     _positional = ("like",)
-    _optional = dict(perm=None, tag=0, comp=None, device=None, ctx=None)
+    _optional = dict(perm=None, tag=0, comp=None, device=None, ctx=None,
+                     timeout=None, max_retries=0)
 
     def _invoke(self) -> PostHandle:
         like = _as_array(self.arg("like"))
@@ -226,11 +253,16 @@ class get_x(FlexOp):
         perm = self.arg_or("perm", None)
         send = PostedOp(kind="send", buffer=like, perm=perm, tag=tag,
                         comp=None, device=dev, seq=runtime().next_seq(),
-                        context=self.arg_or("ctx", None), op_name="get")
+                        context=self.arg_or("ctx", None), op_name="get",
+                        state="matched",
+                        timeout=self.arg_or("timeout", None),
+                        max_retries=self.arg_or("max_retries", 0))
         recv = PostedOp(kind="recv", buffer=like, perm=perm, tag=tag,
                         comp=comp, device=dev, seq=send.seq,
-                        context=self.arg_or("ctx", None), op_name="get")
+                        context=self.arg_or("ctx", None), op_name="get",
+                        state="matched")
         dev.stats["posted"] += 1
+        runtime().watch_deadline(send)
         runtime().enqueue_matches([(send, recv)])
         return PostHandle(comp=comp, posted=recv)
 
@@ -250,22 +282,46 @@ class progress_x(FlexOp):
     group is one transfer; loopback deliveries are zero), and
     ``max_transfers`` limits that same count — loopback groups never
     consume the budget.
+
+    Fault path: each call advances the runtime's progress tick (the
+    clock that op ``timeout`` deadlines and retry backoffs count in),
+    releases due backoff re-posts, drains matches touching dead devices
+    as ``fatal`` completions, routes live matches through the installed
+    :class:`~repro.core.resources.FaultyTransport` (if any), and expires
+    engine-pending ops past their deadline as ``timeout`` completions.
     """
 
     _positional = ()
-    _optional = dict(device=None, pool=None, max_transfers=None)
+    _optional = dict(device=None, pool=None, max_transfers=None,
+                     transport=None)
 
     def _invoke(self) -> int:
+        rt = runtime()
+        rt.tick += 1
         dev_filter = self.arg_or("device", None)
-        pool = self.arg_or("pool", None) or runtime().default_pool
-        matches = runtime().take_ready(dev_filter)
-        if not matches:
-            return 0
-        matches.sort(key=lambda m: m[0].seq)
-        limit = self.arg_or("max_transfers", None)
-        n = _execute(matches, pool, limit)
-        if dev_filter is not None:
-            dev_filter.stats["progressed"] += 1
+        pool = self.arg_or("pool", None) or rt.default_pool
+        transport = self.arg_or("transport", None)
+        if transport is None:
+            transport = rt.transport
+        rt.release_retries()
+        matches = rt.take_ready(dev_filter)
+        n = 0
+        if matches:
+            live = []
+            for s, r in matches:
+                if s.device.alive and r.device.alive:
+                    live.append((s, r))
+                else:
+                    signal_error(s, r, ErrorCode.FATAL)
+            live.sort(key=lambda m: m[0].seq)
+            if transport is not None:
+                live = transport.apply(live)
+            if live:
+                limit = self.arg_or("max_transfers", None)
+                n = _execute(live, pool, limit)
+            if dev_filter is not None:
+                dev_filter.stats["progressed"] += 1
+        rt.expire_timeouts()
         return n
 
 
@@ -292,7 +348,8 @@ def _execute(matches: List[Tuple[PostedOp, PostedOp]],
     for s, r in matches:
         axis = s.device.axis
         if (pool is not None and pool.get_attr_aggregate()
-                and s.allow_aggregation and axis is not None
+                and s.allow_aggregation and s.fault_mark is None
+                and axis is not None
                 and pool.is_eager(_nbytes(s.buffer))):
             pkey = s.perm.key(s.device.axis_size) if s.perm else ()
             key = ("agg", axis, pkey, id(s.device),
@@ -343,6 +400,16 @@ def _check_shapes(s: PostedOp, r: PostedOp) -> None:
             raise ValueError(
                 f"matched send/recv shape mismatch: send {s.buffer.shape} "
                 f"vs recv {r.buffer.shape} (tag={s.tag})")
+
+
+def _corrupt_value(x: Any) -> Any:
+    """Deterministic payload corruption: bitwise inversion through a
+    uint8 view (bools, which have no byte bitcast, flip logically)."""
+    dt = jnp.dtype(x.dtype)
+    if dt.kind == "b":
+        return jnp.logical_not(x)
+    b = lax.bitcast_convert_type(x, jnp.uint8)
+    return lax.bitcast_convert_type(jnp.bitwise_not(b), dt)
 
 
 def _run_single(s: PostedOp, r: PostedOp) -> None:
@@ -436,13 +503,45 @@ def _run_aggregated(grp: List[Tuple[PostedOp, PostedOp]],
 
 
 def _signal(s: PostedOp, r: PostedOp, value: Any) -> None:
+    """Deliver completions for an executed transfer.
+
+    The receiver is signalled first: a full completion queue returns
+    ``retry`` instead of raising from inside progress, and that
+    backpressure decides what the poster sees — an automatic backoff
+    re-post when the op has retry budget, else a ``retry``-status
+    completion the poster can re-post on.  The transport's per-hop
+    ``fault_mark`` (duplicate / corrupt) is consumed here.
+    """
+    mark, s.fault_mark = s.fault_mark, None
+    r_status = ErrorCode.OK
+    if mark in ("corrupt", "corrupt_silent"):
+        value = _corrupt_value(value)
+        if mark == "corrupt":
+            r_status = ErrorCode.RETRY
+    if r.comp is not None:
+        remote = s.op_name in ("put", "am")
+        ret = r.comp.signal(Event(payload=value, op=s.op_name, tag=r.tag,
+                                  perm=r.perm, remote=remote,
+                                  context=r.context, status=r_status))
+        if ret is ErrorCode.RETRY and r_status.ok:
+            # completion-queue overflow: the delivery was not absorbed
+            if runtime().schedule_retry(s, r):
+                return                    # re-delivered after backoff
+            s.state = r.state = "retry"
+            if s.comp is not None:
+                s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
+                                    perm=s.perm, remote=False,
+                                    context=s.context,
+                                    status=ErrorCode.RETRY))
+            return
+        if mark == "duplicate":
+            r.comp.signal(Event(payload=value, op=s.op_name, tag=r.tag,
+                                perm=r.perm, remote=remote,
+                                context=r.context, status=r_status))
+    s.state = r.state = "done"
     if s.comp is not None:
         s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
                             perm=s.perm, remote=False, context=s.context))
-    if r.comp is not None:
-        remote = s.op_name in ("put", "am")
-        r.comp.signal(Event(payload=value, op=s.op_name, tag=r.tag,
-                            perm=r.perm, remote=remote, context=r.context))
 
 
 # ---------------------------------------------------------------------------
@@ -462,6 +561,32 @@ def sendrecv(buffer: Any, perm: Perm, tag: int = 0,
     events = sync.wait()
     (payload,) = [e.payload for e in events if e.payload is not None]
     return payload
+
+
+def cancel(handle: Any) -> bool:
+    """Cancel a posted-but-unmatched operation.
+
+    Accepts a :class:`PostHandle` or a raw
+    :class:`~repro.core.resources.PostedOp`.  If the op is still pending
+    in its matching engine it is retired from the keyed buckets, its
+    completion object receives a ``cancelled``-status event, and the
+    call returns True.  Ops that already matched (their transfer is in
+    the ledger or executed) return False — too late to cancel.
+    """
+    op = handle.posted if isinstance(handle, PostHandle) else handle
+    if not isinstance(op, PostedOp):
+        raise TypeError(f"cancel() takes a PostHandle or PostedOp, "
+                        f"got {type(op).__name__}")
+    if op.state != "pending" or op.engine is None:
+        return False
+    if not op.engine.cancel(op):
+        return False
+    op.state = "cancelled"
+    if op.comp is not None:
+        op.comp.signal(Event(payload=None, op=op.op_name, tag=op.tag,
+                             perm=op.perm, remote=False, context=op.context,
+                             status=ErrorCode.CANCELLED))
+    return True
 
 
 def register_memory(array: Any) -> MemoryRegion:

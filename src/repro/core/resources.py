@@ -31,7 +31,10 @@ is data availability of the traced value.
 from __future__ import annotations
 
 import dataclasses
+import enum
+import heapq
 import itertools
+import random
 import threading
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -108,6 +111,42 @@ class Perm:
 
 
 # ---------------------------------------------------------------------------
+# Status codes (LCI errorcode_t analogue)
+# ---------------------------------------------------------------------------
+class ErrorCode(enum.Enum):
+    """Per-operation status, mirroring LCI's ``errorcode_t``: every post
+    and every completion carries one instead of success-or-crash.
+
+    - ``OK``        — the operation completed normally.
+    - ``RETRY``     — transient resource exhaustion (completion-queue
+      overflow, corrupt-marked delivery); the poster may re-post.
+    - ``TIMEOUT``   — the op's progress-call-count deadline elapsed
+      before a match/delivery.
+    - ``CANCELLED`` — the op was retired via :func:`repro.core.cancel`.
+    - ``FATAL``     — unrecoverable (retries exhausted, dead device).
+    """
+
+    OK = "ok"
+    RETRY = "retry"
+    TIMEOUT = "timeout"
+    CANCELLED = "cancelled"
+    FATAL = "fatal"
+
+    @property
+    def ok(self) -> bool:
+        return self is ErrorCode.OK
+
+
+class CompletionError(RuntimeError):
+    """Raised when a waited-on completion carries a non-ok status.
+    ``events`` holds the offending :class:`Event` objects."""
+
+    def __init__(self, msg: str, events: Sequence["Event"] = ()) -> None:
+        super().__init__(msg)
+        self.events = list(events)
+
+
+# ---------------------------------------------------------------------------
 # Completion objects
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(eq=False)
@@ -120,6 +159,7 @@ class Event:
     perm: Optional[Perm] = None
     remote: bool = False         # True when this is a *remote* completion
     context: Any = None          # user context passed at post time
+    status: ErrorCode = ErrorCode.OK
 
 
 class CompletionObject(HasAttrs):
@@ -132,8 +172,11 @@ class CompletionObject(HasAttrs):
     def __init__(self, **attrs: Any) -> None:
         self._init_attrs(attrs)
 
-    def signal(self, event: Event) -> None:  # pragma: no cover - abstract
-        raise NotImplementedError
+    def signal(self, event: Event) -> Optional[ErrorCode]:
+        """Deliver one event.  May return :attr:`ErrorCode.RETRY` to
+        push back on the signaller (e.g. queue overflow); ``None`` or
+        :attr:`ErrorCode.OK` mean the event was absorbed."""
+        raise NotImplementedError  # pragma: no cover - abstract
 
     # Default-resource bookkeeping
     def __repr__(self) -> str:
@@ -160,10 +203,18 @@ class Synchronizer(CompletionObject):
     def ready(self) -> bool:
         return len(self._events) >= self.threshold
 
-    def wait(self, reset: bool = True) -> List[Event]:
+    def wait(self, reset: bool = True,
+             raise_on_error: bool = True) -> List[Event]:
         """Return the completed events.  In trace-time LCX, ops complete
         at ``progress()``; waiting before enough progress is a program
-        error (there is no background thread to make it ready)."""
+        error (there is no background thread to make it ready).
+
+        A non-ok event (timeout, cancellation, fatal transport failure)
+        raises :class:`CompletionError` — errors surface instead of
+        counting as silent successes.  Pass ``raise_on_error=False`` to
+        receive the events and inspect ``event.status`` yourself; on
+        raise the events stay queued for inspection.
+        """
         if not self.ready():
             raise RuntimeError(
                 f"Synchronizer.wait(): only {len(self._events)} of "
@@ -172,6 +223,13 @@ class Synchronizer(CompletionObject):
             )
         events, rest = (self._events[: self.threshold],
                         self._events[self.threshold:])
+        if raise_on_error:
+            bad = [e for e in events if not e.status.ok]
+            if bad:
+                raise CompletionError(
+                    f"Synchronizer.wait(): {len(bad)} of {len(events)} "
+                    f"completions failed: "
+                    f"{sorted({e.status.value for e in bad})}", bad)
         if reset:
             self._events = rest
         return events
@@ -179,20 +237,37 @@ class Synchronizer(CompletionObject):
     def wait_payloads(self, reset: bool = True) -> List[Any]:
         return [e.payload for e in self.wait(reset=reset)]
 
+    def error_events(self) -> List[Event]:
+        """Arrived events carrying a non-ok status (without consuming)."""
+        return [e for e in self._events if not e.status.ok]
+
 
 class CompletionQueue(CompletionObject):
-    """FIFO completion queue."""
+    """FIFO completion queue.
+
+    A full queue does **not** raise from inside progress (which would
+    lose the event and tear down the progress engine): ``signal``
+    returns :attr:`ErrorCode.RETRY` and the progress engine converts it
+    into a retry-status completion for the poster (or an automatic
+    backoff re-post when the op carries ``max_retries``).
+    """
 
     _ATTR_DEFAULTS = {"capacity": 1 << 16}
 
     def __init__(self, capacity: Optional[int] = None, **attrs: Any) -> None:
         super().__init__(capacity=capacity, **attrs)
         self._q: deque = deque()
+        self.overflows = 0
+        self.n_error_events = 0
 
-    def signal(self, event: Event) -> None:
+    def signal(self, event: Event) -> ErrorCode:
         if len(self._q) >= self._attrs["capacity"]:
-            raise RuntimeError("CompletionQueue overflow")
+            self.overflows += 1
+            return ErrorCode.RETRY
+        if not event.status.ok:
+            self.n_error_events += 1
         self._q.append(event)
+        return ErrorCode.OK
 
     def pop(self) -> Optional[Event]:
         return self._q.popleft() if self._q else None
@@ -223,19 +298,31 @@ class FunctionHandler(CompletionObject):
 
 class CounterCompletion(CompletionObject):
     """Example of the paper's "overload ``signal`` with an atomic counter"
-    pattern: becomes ready when N ops completed, keeps no payloads."""
+    pattern: becomes ready when N ops completed, keeps no payloads.
+
+    Only ok-status completions advance the counter; failed completions
+    are collected in :attr:`errors` so a lost transfer can never satisfy
+    a success threshold silently."""
 
     _ATTR_DEFAULTS = {"target": 1}
 
     def __init__(self, target: Optional[int] = None, **attrs: Any) -> None:
         super().__init__(target=target, **attrs)
         self.count = 0
+        self.errors: List[Event] = []
 
     def signal(self, event: Event) -> None:
-        self.count += 1
+        if event.status.ok:
+            self.count += 1
+        else:
+            self.errors.append(event)
 
     def ready(self) -> bool:
         return self.count >= self._attrs["target"]
+
+    @property
+    def error_count(self) -> int:
+        return len(self.errors)
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +350,19 @@ class PostedOp:
     # Match key, computed ONCE at post time by the matching engine the op
     # is posted to (it depends on the engine's policy).  _NO_KEY until then.
     match_key: Any = _NO_KEY
+    # -- lifecycle (fault-tolerance) ----------------------------------------
+    # "pending"   — posted, waiting in a matching engine
+    # "matched"   — matched, waiting in the transfer ledger / retry queue
+    # "done"      — completion signalled
+    # "cancelled" / "timeout" / "fatal" — retired with that status
+    state: str = "pending"
+    engine: Optional["MatchingEngine"] = None
+    timeout: Optional[int] = None      # deadline in progress calls
+    max_retries: int = 0               # backoff re-posts on drop/overflow
+    retries: int = 0                   # attempts consumed
+    delays: int = 0                    # consecutive injected delays
+    posted_tick: int = 0               # runtime tick at post time
+    fault_mark: Optional[str] = None   # set by FaultyTransport for this hop
 
 
 class MatchingEngine(HasAttrs):
@@ -338,13 +438,18 @@ class MatchingEngine(HasAttrs):
     # -- posting ---------------------------------------------------------------
     def post(self, op: PostedOp) -> List[Tuple[PostedOp, PostedOp]]:
         """Post an op; return newly formed (send, recv) matches."""
+        op.engine = self
         if self._attrs["kind"] == "queue":
             if op.kind == "send":
                 self._pending_send.append(op)
             else:
                 self._pending_recv.append(op)
-            return self._drain_queue()
-        return self._post_map(op)
+            matches = self._drain_queue()
+        else:
+            matches = self._post_map(op)
+        for s, r in matches:
+            s.state = r.state = "matched"
+        return matches
 
     def _post_map(self, op: PostedOp) -> List[Tuple[PostedOp, PostedOp]]:
         key = self._key(op)
@@ -437,6 +542,55 @@ class MatchingEngine(HasAttrs):
         self.n_matched += len(matches)
         return matches
 
+    # -- cancellation ----------------------------------------------------------
+    def cancel(self, op: PostedOp) -> bool:
+        """Retire a still-pending op from the engine's buckets.
+
+        The op is removed *physically* (not tombstoned), so
+        :meth:`pending` reflects the cancellation immediately rather
+        than waiting for bucket compaction.  Returns ``False`` when the
+        op already matched, completed, or belongs to another engine —
+        too late to cancel."""
+        if op.state != "pending" or op.engine is not self:
+            return False
+        if self._attrs["kind"] == "queue":
+            q = self._pending_send if op.kind == "send" else self._pending_recv
+            try:
+                q.remove(op)
+            except ValueError:
+                return False
+            return True
+        # map kind: keyed bucket or unhashable overflow
+        own_buckets = (self._send_buckets if op.kind == "send"
+                       else self._recv_buckets)
+        own_overflow = (self._send_overflow if op.kind == "send"
+                        else self._recv_overflow)
+        removed = False
+        try:
+            bucket = own_buckets.get(op.match_key)
+        except TypeError:
+            bucket = None
+        if bucket is not None:
+            try:
+                bucket.remove(op)
+                removed = True
+                if not bucket:
+                    del own_buckets[op.match_key]
+            except ValueError:
+                pass
+        if not removed:
+            for i, (_, oop) in enumerate(own_overflow):
+                if oop is op:
+                    del own_overflow[i]
+                    removed = True
+                    break
+        if removed:
+            if op.kind == "send":
+                self._n_send -= 1
+            else:
+                self._n_recv -= 1
+        return removed
+
     def pending(self) -> Tuple[int, int]:
         if self._attrs["kind"] == "queue":
             return len(self._pending_send), len(self._pending_recv)
@@ -495,6 +649,14 @@ class Device(HasAttrs):
         self._init_attrs({"axis": axis, **attrs})
         self.stats = {"posted": 0, "transfers": 0, "progressed": 0,
                       "bytes_moved": 0}
+        self.alive = True
+
+    def mark_dead(self) -> None:
+        """Declare this device failed.  Matched transfers touching a
+        dead device drain as ``fatal`` completions at the next progress
+        call (or immediately via ``runtime().drain_dead``) instead of
+        hanging their completion objects forever."""
+        self.alive = False
 
     @property
     def axis(self) -> Optional[str]:
@@ -534,6 +696,132 @@ class MemoryRegion:
 
 
 # ---------------------------------------------------------------------------
+# Fault-injecting transport (seeded, deterministic, CPU-testable)
+# ---------------------------------------------------------------------------
+def signal_error(s: PostedOp, r: PostedOp, code: ErrorCode) -> None:
+    """Deliver a non-ok completion to both sides of a matched pair
+    (payload-less: the transfer never happened)."""
+    s.state = r.state = code.value
+    if s.comp is not None:
+        s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
+                            perm=s.perm, remote=False, context=s.context,
+                            status=code))
+    if r.comp is not None:
+        remote = s.op_name in ("put", "am")
+        r.comp.signal(Event(payload=None, op=s.op_name, tag=r.tag,
+                            perm=r.perm, remote=remote, context=r.context,
+                            status=code))
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    """Seeded fault schedule for :class:`FaultyTransport`.
+
+    Rates are per matched transfer per progress attempt; they must sum
+    to at most 1.  ``corrupt_mark=True`` stamps corrupted deliveries
+    with :attr:`ErrorCode.RETRY` (an integrity-checked link); ``False``
+    corrupts silently (the checksum-free link — higher layers must
+    detect).  ``max_delays`` bounds consecutive delays per transfer so a
+    pathological ``delay=1.0`` policy still terminates."""
+
+    seed: int = 0
+    drop: float = 0.0
+    delay: float = 0.0
+    duplicate: float = 0.0
+    corrupt: float = 0.0
+    corrupt_mark: bool = True
+    max_delays: int = 16
+
+    def __post_init__(self) -> None:
+        total = self.drop + self.delay + self.duplicate + self.corrupt
+        if not 0.0 <= total <= 1.0:
+            raise ValueError(f"fault rates must sum to [0, 1], got {total}")
+
+
+class FaultyTransport:
+    """Injectable transport faults, mirroring the
+    :class:`repro.runtime.fault.FailureInjector` idiom: every decision
+    comes from one seeded RNG, so a given (policy, workload) pair
+    replays identically on CPU.
+
+    Applied by ``progress()`` to each matched transfer before execution:
+
+    - **drop** — the transfer is lost.  With retries remaining
+      (``max_retries`` on the post) it is re-posted after exponential
+      backoff; otherwise both sides complete with ``fatal``.
+    - **delay** — the match is re-enqueued; it needs extra progress
+      calls to land (bounded by ``policy.max_delays``).
+    - **duplicate** — the receiver's completion object is signalled
+      twice with the same payload.
+    - **corrupt** — the payload arrives bitwise-inverted, stamped
+      ``retry`` when ``policy.corrupt_mark``.
+    """
+
+    def __init__(self, policy: Optional[FaultPolicy] = None,
+                 **policy_kwargs: Any) -> None:
+        self.policy = policy if policy is not None \
+            else FaultPolicy(**policy_kwargs)
+        self._rng = random.Random(self.policy.seed)
+        self.stats = {"transfers": 0, "drops": 0, "delays": 0,
+                      "duplicates": 0, "corruptions": 0, "retries": 0,
+                      "fatal": 0}
+
+    def decide(self) -> str:
+        u = self._rng.random()
+        p = self.policy
+        if u < p.drop:
+            return "drop"
+        u -= p.drop
+        if u < p.delay:
+            return "delay"
+        u -= p.delay
+        if u < p.duplicate:
+            return "duplicate"
+        u -= p.duplicate
+        if u < p.corrupt:
+            return "corrupt"
+        return "ok"
+
+    def apply(self, matches: List[Tuple[PostedOp, PostedOp]]
+              ) -> List[Tuple[PostedOp, PostedOp]]:
+        """Fault-filter matched pairs; returns the ones to execute now.
+        Dropped pairs go to the retry queue (or fail fatally); delayed
+        pairs go back to the ledger; duplicate/corrupt pairs pass
+        through with a ``fault_mark`` the execution path consumes."""
+        rt = runtime()
+        out: List[Tuple[PostedOp, PostedOp]] = []
+        for s, r in matches:
+            self.stats["transfers"] += 1
+            action = self.decide()
+            if action == "delay" and s.delays >= self.policy.max_delays:
+                action = "ok"
+            if action == "drop":
+                self.stats["drops"] += 1
+                if rt.schedule_retry(s, r):
+                    self.stats["retries"] += 1
+                else:
+                    self.stats["fatal"] += 1
+                    signal_error(s, r, ErrorCode.FATAL)
+            elif action == "delay":
+                self.stats["delays"] += 1
+                s.delays += 1
+                rt.enqueue_matches([(s, r)])
+            elif action == "duplicate":
+                self.stats["duplicates"] += 1
+                s.fault_mark = "duplicate"
+                out.append((s, r))
+            elif action == "corrupt":
+                self.stats["corruptions"] += 1
+                s.fault_mark = ("corrupt" if self.policy.corrupt_mark
+                                else "corrupt_silent")
+                out.append((s, r))
+            else:
+                s.delays = 0
+                out.append((s, r))
+        return out
+
+
+# ---------------------------------------------------------------------------
 # Runtime (default resources + pending transfer ledger)
 # ---------------------------------------------------------------------------
 class Runtime:
@@ -566,6 +854,13 @@ class Runtime:
         # is drained first claims the match.
         self._ready: Dict[int, List[List[Any]]] = {}
         self._n_pending = 0
+        # Fault path: progress-call tick counter, optional fault-injecting
+        # transport, backoff retry queue (min-heap on release tick), and
+        # the deadline watchlist for ops posted with a timeout.
+        self.tick = 0
+        self.transport: Optional[FaultyTransport] = None
+        self._retry_q: List[Tuple[int, int, Tuple[PostedOp, PostedOp]]] = []
+        self._timed: List[PostedOp] = []
         # Aggregation-plan cache: (axis, perm-key, dtype-sig, shape-sig)
         # -> concat/slice layout, reused across progress calls so
         # steady-state loops don't re-derive pack/unpack plans.
@@ -625,7 +920,99 @@ class Runtime:
         return out
 
     def pending_count(self) -> int:
-        return self._n_pending
+        # backoff-queued retries are still in flight: they re-enter the
+        # ledger when due, so they count toward backpressure and the
+        # finalize() leak check
+        return self._n_pending + len(self._retry_q)
+
+    # -- fault path: retries, deadlines, dead devices -------------------------
+    def schedule_retry(self, s: PostedOp, r: PostedOp) -> bool:
+        """Queue a lost/backpressured matched pair for an exponential-
+        backoff re-post.  Returns False (caller must surface an error)
+        when the pair has no retry budget left or its deadline already
+        elapsed."""
+        budget = max(s.max_retries, r.max_retries)
+        if s.retries >= budget:
+            return False
+        if s.timeout is not None and \
+                self.tick - s.posted_tick >= s.timeout:
+            return False
+        s.retries += 1
+        backoff = 1 << (s.retries - 1)
+        heapq.heappush(self._retry_q,
+                       (self.tick + backoff, s.seq, (s, r)))
+        return True
+
+    def release_retries(self) -> None:
+        """Move due retry entries back into the transfer ledger; expire
+        the ones whose op deadline passed while backing off."""
+        while self._retry_q and self._retry_q[0][0] <= self.tick:
+            _, _, (s, r) = heapq.heappop(self._retry_q)
+            if s.timeout is not None and \
+                    self.tick - s.posted_tick >= s.timeout:
+                signal_error(s, r, ErrorCode.TIMEOUT)
+                continue
+            self.enqueue_matches([(s, r)])
+
+    def watch_deadline(self, op: PostedOp) -> None:
+        op.posted_tick = self.tick
+        if op.timeout is not None:
+            self._timed.append(op)
+
+    def expire_timeouts(self) -> None:
+        """Retire engine-pending ops whose progress-call deadline passed:
+        they are cancelled out of the matching engine and their
+        completion object receives a ``timeout`` event."""
+        if not self._timed:
+            return
+        still: List[PostedOp] = []
+        for op in self._timed:
+            if op.state != "pending":
+                continue                      # matched/retired: deadline moot
+            if self.tick - op.posted_tick < op.timeout:
+                still.append(op)
+                continue
+            if op.engine is not None:
+                op.engine.cancel(op)
+            op.state = "timeout"
+            if op.comp is not None:
+                op.comp.signal(Event(payload=None, op=op.op_name, tag=op.tag,
+                                     perm=op.perm, remote=False,
+                                     context=op.context,
+                                     status=ErrorCode.TIMEOUT))
+        self._timed = still
+
+    def drain_dead(self, device: Optional[Device] = None) -> int:
+        """Drain matched transfers touching a dead device as ``fatal``
+        completions.  With ``device=None`` every ledger entry whose send
+        or recv device died is drained.  Returns the drain count."""
+        drained = 0
+        for s, r in self.take_ready(device):
+            if s.device.alive and r.device.alive:
+                self.enqueue_matches([(s, r)])   # healthy: put it back
+            else:
+                signal_error(s, r, ErrorCode.FATAL)
+                drained += 1
+        keep: List[Tuple[int, int, Tuple[PostedOp, PostedOp]]] = []
+        for entry in self._retry_q:
+            s, r = entry[2]
+            if s.device.alive and r.device.alive:
+                keep.append(entry)
+            else:
+                signal_error(s, r, ErrorCode.FATAL)
+                drained += 1
+        if len(keep) != len(self._retry_q):
+            heapq.heapify(keep)
+            self._retry_q = keep
+        return drained
+
+    def has_inflight(self) -> bool:
+        """True while time-based work (backoff retries, armed deadlines)
+        can still make progress — callers polling the engine should keep
+        driving ``progress()`` rather than declare deadlock."""
+        if self._retry_q:
+            return True
+        return any(op.state == "pending" for op in self._timed)
 
 
 _RUNTIME: Optional[Runtime] = None
@@ -654,3 +1041,13 @@ def runtime() -> Runtime:
     if _RUNTIME is None:
         _RUNTIME = Runtime()
     return _RUNTIME
+
+
+def install_transport(
+        transport: Optional[FaultyTransport]) -> Optional[FaultyTransport]:
+    """Install (or, with ``None``, remove) the runtime's fault-injecting
+    transport; every subsequent ``progress()`` routes matched transfers
+    through it.  Returns the previous transport."""
+    rt = runtime()
+    prev, rt.transport = rt.transport, transport
+    return prev

@@ -1,7 +1,7 @@
 from .fault import (FailureInjector, NodeFailure, StragglerMonitor,
-                    elastic_reshard, shrink_mesh_shape)
+                    elastic_reshard, fail_device, shrink_mesh_shape)
 from .trainer import TrainConfig, Trainer, make_train_step
 
 __all__ = ["FailureInjector", "NodeFailure", "StragglerMonitor",
-           "elastic_reshard", "shrink_mesh_shape", "TrainConfig",
-           "Trainer", "make_train_step"]
+           "elastic_reshard", "fail_device", "shrink_mesh_shape",
+           "TrainConfig", "Trainer", "make_train_step"]

@@ -31,20 +31,42 @@ class NodeFailure(RuntimeError):
 
 
 class FailureInjector:
-    """Deterministic failure schedule for tests/examples."""
+    """Deterministic failure schedule for tests/examples.
+
+    ``devices`` optionally names LCX :class:`~repro.core.Device` objects
+    to kill when the failure fires: each is marked dead and its pending
+    transfer ledger drains as ``fatal`` completion events (see
+    :func:`fail_device`), so comm-blocked waiters observe the loss
+    instead of hanging."""
 
     def __init__(self, fail_at: Sequence[int] = (),
-                 lost_devices: int = 0) -> None:
+                 lost_devices: int = 0,
+                 devices: Sequence[Any] = ()) -> None:
         self.fail_at = set(fail_at)
         self.lost_devices = lost_devices
+        self.devices = list(devices)
         self.fired: List[int] = []
 
     def check(self, step: int) -> None:
         if step in self.fail_at:
             self.fail_at.discard(step)
             self.fired.append(step)
+            for dev in self.devices:
+                fail_device(dev)
             raise NodeFailure(f"injected node failure at step {step}",
                               self.lost_devices)
+
+
+def fail_device(device: Any) -> int:
+    """Mark an LCX device dead and drain its pending ledger as ``fatal``
+    completions.  Returns the number of transfers drained.  This is the
+    bridge from :class:`NodeFailure` to the comm layer: completion
+    objects waiting on the dead device observe ``ErrorCode.FATAL``
+    events (no infinite hang) and the caller can proceed to
+    :func:`elastic_reshard`."""
+    from repro.core import runtime  # local import: core must stay optional
+    device.mark_dead()
+    return runtime().drain_dead(device)
 
 
 class StragglerMonitor:
@@ -92,10 +114,18 @@ def shrink_mesh_shape(shape: Dict[str, int], lost: int) -> Dict[str, int]:
     """Halve the data axis until the lost devices are covered — the
     remesh policy used when a host drops (model axis is preserved so
     parameter layouts stay valid).  Losing ANY device forces at least
-    one halving (the dead host's row is gone)."""
+    one halving (the dead host's row is gone).
+
+    Each halving removes ``data/2 × (product of the other axes)``
+    *actual* devices; the count accumulates until it reaches ``lost``
+    (or the data axis bottoms out at 1)."""
     new = dict(shape)
+    other = 1
+    for axis, n in new.items():
+        if axis != "data":
+            other *= n
     covered = 0
     while covered < max(lost, 1) and new.get("data", 1) > 1:
         new["data"] //= 2
-        covered = covered * 2 + 1
+        covered += new["data"] * other
     return new

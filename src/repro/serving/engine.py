@@ -56,6 +56,7 @@ class Request:
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None        # set when the request was evicted
     submitted_at: float = 0.0
     finished_at: float = 0.0
 
@@ -117,10 +118,12 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * scfg.n_slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.failed: List[Request] = []
         self._key = jax.random.PRNGKey(scfg.seed)
         self._decode = jax.jit(make_decode_fn(cfg, kernels))
         self._prefill_cache: Dict[int, Any] = {}
-        self.stats = {"ticks": 0, "prefills": 0, "decoded_tokens": 0}
+        self.stats = {"ticks": 0, "prefills": 0, "decoded_tokens": 0,
+                      "evictions": 0}
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -150,28 +153,44 @@ class ServingEngine:
             req = self.queue.pop(0)
             self._admit_one(req)
 
+    def _evict(self, req: Request, reason: str) -> None:
+        """Terminally fail ``req`` without touching slot state: the tick
+        loop keeps serving the other slots instead of wedging."""
+        req.done = True
+        req.error = reason
+        req.finished_at = time.perf_counter()
+        self.finished.append(req)
+        self.failed.append(req)
+        self.stats["evictions"] += 1
+
     def _admit_one(self, req: Request) -> bool:
         """Prefill ``req`` into a free slot.  Returns False when no slot
         is free (caller re-queues); True when the request was placed or
-        terminally handled."""
+        terminally handled (including eviction on prefill failure)."""
         free = self._free_slots()
         if not free:
             return False
         slot = free[0]
         plen = len(req.prompt)
         if plen >= self.scfg.max_seq:
-            req.done = True
-            self.finished.append(req)
+            self._evict(req, f"prompt length {plen} >= max_seq "
+                             f"{self.scfg.max_seq}")
             return True
-        toks = jnp.asarray(req.prompt, jnp.int32)
         axes = cache_batch_axes(self.cfg, self.caches)
-        slot_cache = jax.tree.map(
-            lambda t, a: jnp.take(t, slot, axis=a), self.caches, axes)
-        # exact-length prefill: one compiled program per distinct
-        # prompt length (bucketing would corrupt SSM prefill state —
-        # the recurrent state cannot mask padding the way KV rows can)
-        lg, new_cache = self._prefill_fn(plen)(
-            self.params, toks, slot_cache)
+        try:
+            toks = jnp.asarray(req.prompt, jnp.int32)
+            slot_cache = jax.tree.map(
+                lambda t, a: jnp.take(t, slot, axis=a), self.caches, axes)
+            # exact-length prefill: one compiled program per distinct
+            # prompt length (bucketing would corrupt SSM prefill state —
+            # the recurrent state cannot mask padding the way KV rows can)
+            lg, new_cache = self._prefill_fn(plen)(
+                self.params, toks, slot_cache)
+        except Exception as e:
+            # the shared cache was not written yet — evict the request
+            # and leave the slot free for the next one
+            self._evict(req, f"prefill failed: {type(e).__name__}: {e}")
+            return True
         self.caches = jax.tree.map(
             lambda buf, nc, a: jax.lax.dynamic_update_slice_in_dim(
                 buf, jnp.expand_dims(nc, a).astype(buf.dtype),

@@ -60,10 +60,12 @@ def test_synchronizer_threshold():
 
 def test_completion_queue_fifo_and_overflow():
     cq = lcx.CompletionQueue(capacity=2)
-    cq.signal(lcx.Event(payload="a"))
-    cq.signal(lcx.Event(payload="b"))
-    with pytest.raises(RuntimeError):
-        cq.signal(lcx.Event(payload="c"))
+    assert cq.signal(lcx.Event(payload="a")) is lcx.ErrorCode.OK
+    assert cq.signal(lcx.Event(payload="b")) is lcx.ErrorCode.OK
+    # overflow is backpressure, not a crash: the event is refused with
+    # a retry status (LCI's posts-return-retry idiom), never enqueued
+    assert cq.signal(lcx.Event(payload="c")) is lcx.ErrorCode.RETRY
+    assert cq.overflows == 1
     assert cq.pop().payload == "a"
     assert len(cq) == 1
     assert [e.payload for e in cq.pop_all()] == ["b"]

@@ -1,0 +1,473 @@
+"""Fault tolerance end-to-end: status-carrying completions, injectable
+transport faults, retry/timeout/backoff, cancellation, dead-device
+drain, and graceful degradation in the AMT executor.
+
+All fault policies are seeded and trace-time, so everything here runs
+deterministically on one CPU device (loopback for single-rank paths,
+vmap-emulated axes for ranked paths, as in test_core_ops)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as lcx
+import repro.amt as amt
+from repro.runtime import FailureInjector, NodeFailure, elastic_reshard, \
+    fail_device
+
+N = 4
+
+
+def ranked(fn, n=N):
+    return jax.vmap(fn, axis_name="x")(jnp.arange(float(n)))
+
+
+# ---------------------------------------------------------------------------
+# Status-carrying completion objects
+# ---------------------------------------------------------------------------
+def test_event_status_defaults_ok():
+    ev = lcx.Event(payload=1)
+    assert ev.status is lcx.ErrorCode.OK
+    assert ev.status.ok
+    for code in (lcx.ErrorCode.RETRY, lcx.ErrorCode.TIMEOUT,
+                 lcx.ErrorCode.CANCELLED, lcx.ErrorCode.FATAL):
+        assert not code.ok
+
+
+def test_synchronizer_surfaces_error_status():
+    sync = lcx.Synchronizer(threshold=2)
+    sync.signal(lcx.Event(payload=1))
+    sync.signal(lcx.Event(payload=None, status=lcx.ErrorCode.FATAL))
+    assert sync.ready()
+    assert [e.status for e in sync.error_events()] == [lcx.ErrorCode.FATAL]
+    with pytest.raises(lcx.CompletionError) as ei:
+        sync.wait()
+    assert ei.value.events[0].status is lcx.ErrorCode.FATAL
+    # events are not consumed by the raise; opting out returns them all
+    evs = sync.wait(raise_on_error=False)
+    assert [e.status.ok for e in evs] == [True, False]
+    assert not sync.ready()
+
+
+def test_counter_completion_routes_errors():
+    cnt = lcx.CounterCompletion(target=2)
+    cnt.signal(lcx.Event(payload=1))
+    cnt.signal(lcx.Event(payload=None, status=lcx.ErrorCode.TIMEOUT))
+    assert cnt.count == 1                  # errors never count as success
+    assert cnt.error_count == 1
+    assert cnt.errors[0].status is lcx.ErrorCode.TIMEOUT
+    assert not cnt.ready()
+
+
+# ---------------------------------------------------------------------------
+# FaultyTransport policies (loopback device exercises the full path)
+# ---------------------------------------------------------------------------
+def _run_puts(seed, n=20, **rates):
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=seed, **rates))
+    cq = lcx.CompletionQueue()
+    for i in range(n):
+        lcx.put_x(jnp.float32(i)).remote_comp(cq).max_retries(10)()
+    for _ in range(200):
+        lcx.progress()
+        if len(cq) >= n and not lcx.runtime().has_inflight():
+            break
+    return cq, dict(lcx.runtime().transport.stats)
+
+
+def test_fault_policy_validation():
+    with pytest.raises(ValueError):
+        lcx.FaultPolicy(drop=0.8, delay=0.3)
+    with pytest.raises(ValueError):
+        lcx.FaultPolicy(drop=-0.1)
+
+
+def test_faulty_transport_deterministic():
+    _, s1 = _run_puts(seed=11, drop=0.2, delay=0.1)
+    _, s2 = _run_puts(seed=11, drop=0.2, delay=0.1)
+    assert s1 == s2
+    # per-transfer decision streams: identical for equal seeds,
+    # different for different seeds
+    mk = lambda seed: lcx.FaultyTransport(seed=seed, drop=0.2, delay=0.1,
+                                          duplicate=0.1, corrupt=0.1)
+    t1, t2, t3 = mk(11), mk(11), mk(12)
+    d1 = [t1.decide() for _ in range(64)]
+    d2 = [t2.decide() for _ in range(64)]
+    d3 = [t3.decide() for _ in range(64)]
+    assert d1 == d2
+    assert d1 != d3
+
+
+def test_drop_with_retries_converges():
+    cq, stats = _run_puts(seed=3, drop=0.3)
+    assert len(cq) == 20
+    assert stats["drops"] > 0
+    assert stats["retries"] == stats["drops"]
+    assert stats["fatal"] == 0
+    assert sorted(float(e.payload) for e in cq.pop_all()) == \
+        [float(i) for i in range(20)]
+
+
+def test_drop_without_retries_is_fatal_not_hang():
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=1, drop=1.0))
+    sync = lcx.Synchronizer()
+    remote = lcx.Synchronizer()
+    h = lcx.put_x(jnp.ones(2)).comp(sync).remote_comp(remote)()
+    lcx.progress()
+    assert h.status == "fatal"
+    # BOTH sides observe the loss — no completion object hangs
+    with pytest.raises(lcx.CompletionError):
+        sync.wait()
+    with pytest.raises(lcx.CompletionError):
+        remote.wait()
+    assert lcx.runtime().pending_count() == 0
+
+
+def test_retry_budget_exhaustion_is_fatal():
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=1, drop=1.0))
+    sync = lcx.Synchronizer()
+    lcx.put_x(jnp.ones(2)).remote_comp(sync).max_retries(3)()
+    for _ in range(40):
+        lcx.progress()
+    (ev,) = sync.wait(raise_on_error=False)
+    assert ev.status is lcx.ErrorCode.FATAL
+    assert lcx.runtime().transport.stats["fatal"] == 1
+    assert not lcx.runtime().has_inflight()
+
+
+def test_delay_is_bounded_and_converges():
+    # pathological always-delay policy still terminates via max_delays
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=0, delay=1.0,
+                                              max_delays=4))
+    cq = lcx.CompletionQueue()
+    lcx.put_x(jnp.float32(7.0)).remote_comp(cq)()
+    for _ in range(10):
+        lcx.progress()
+    assert len(cq) == 1
+    assert lcx.runtime().transport.stats["delays"] == 4
+
+
+def test_duplicate_delivers_twice():
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=0, duplicate=1.0))
+    cq = lcx.CompletionQueue()
+    lcx.put_x(jnp.float32(5.0)).remote_comp(cq)()
+    lcx.progress()
+    evs = cq.pop_all()
+    assert len(evs) == 2
+    assert all(float(e.payload) == 5.0 for e in evs)
+
+
+def test_corrupt_marks_retry_status_and_flips_bits():
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=0, corrupt=1.0))
+    cq = lcx.CompletionQueue()
+    lcx.put_x(jnp.float32(1.0)).remote_comp(cq)()
+    lcx.progress()
+    ev = cq.pop()
+    assert ev.status is lcx.ErrorCode.RETRY       # detected corruption
+    assert float(ev.payload) != 1.0               # bitwise-NOT of payload
+    # silent corruption: same payload damage, but status stays ok
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=0, corrupt=1.0,
+                                              corrupt_mark=False))
+    cq = lcx.CompletionQueue()
+    lcx.put_x(jnp.float32(1.0)).remote_comp(cq)()
+    lcx.progress()
+    ev = cq.pop()
+    assert ev.status.ok
+    assert float(ev.payload) != 1.0
+
+
+# ---------------------------------------------------------------------------
+# Op lifecycle: timeout, cancel
+# ---------------------------------------------------------------------------
+def test_unmatched_recv_times_out():
+    lcx.init()
+    cq = lcx.CompletionQueue()
+    h = lcx.recv_x(jnp.zeros(2)).tag(9).comp(cq).timeout(3)()
+    lcx.progress()
+    assert h.status == "pending"
+    for _ in range(4):
+        lcx.progress()
+    assert h.status == "timeout"
+    ev = cq.pop()
+    assert ev.status is lcx.ErrorCode.TIMEOUT
+    # the op was retired from the engine, not leaked
+    assert lcx.runtime().default_engine.pending() == (0, 0)
+
+
+def test_cancel_pending_send():
+    lcx.init()
+    sync = lcx.Synchronizer()
+    h = lcx.send_x(jnp.zeros(2)).tag(4).comp(sync)()
+    assert h.status == "pending"
+    assert h.cancel() is True
+    assert h.status == "cancelled"
+    assert h.cancel() is False            # idempotent: already retired
+    (ev,) = sync.wait(raise_on_error=False)
+    assert ev.status is lcx.ErrorCode.CANCELLED
+    assert lcx.runtime().default_engine.pending() == (0, 0)
+
+
+def test_cancel_after_match_fails():
+    lcx.init()
+    h = lcx.send_x(jnp.float32(1.0)).tag(1)()
+    lcx.recv_x(jnp.float32(0.0)).tag(1)()
+    assert h.status == "matched"
+    assert h.cancel() is False
+
+
+def test_pending_exact_after_cancel():
+    """Satellite regression: cancelled entries must leave the engine's
+    pending() counts exact, in keyed buckets, FIFO queues, and the
+    unhashable-key overflow list."""
+    lcx.init()
+    eng = lcx.runtime().default_engine
+    hs = [lcx.send_x(jnp.float32(i)).tag(i)() for i in range(4)]
+    assert eng.pending() == (4, 0)
+    assert hs[1].cancel() and hs[2].cancel()
+    assert eng.pending() == (2, 0)
+    # remaining sends still match their recvs
+    for i in (0, 3):
+        lcx.recv_x(jnp.float32(0.0)).tag(i)()
+    assert eng.pending() == (0, 0)
+    lcx.progress()
+
+    # queue kind
+    lcx.init()
+    qeng = lcx.MatchingEngine(kind="queue", policy="tag_only")
+    h1 = lcx.send_x(jnp.float32(1.0)).tag(1).matching_engine(qeng)()
+    h2 = lcx.send_x(jnp.float32(2.0)).tag(2).matching_engine(qeng)()
+    assert qeng.pending() == (2, 0)
+    assert h1.cancel()
+    assert qeng.pending() == (1, 0)
+    # FIFO head is now the surviving send (tag 2)
+    lcx.recv_x(jnp.float32(0.0)).tag(2).matching_engine(qeng)()
+    assert qeng.pending() == (0, 0)
+
+    # unhashable custom keys take the overflow-list path
+    lcx.init()
+    ueng = lcx.MatchingEngine(policy="custom",
+                              key_fn=lambda op: [op.tag])
+    h1 = lcx.send_x(jnp.float32(1.0)).tag(1).matching_engine(ueng)()
+    h2 = lcx.send_x(jnp.float32(2.0)).tag(2).matching_engine(ueng)()
+    assert ueng.pending() == (2, 0)
+    assert h1.cancel()
+    assert ueng.pending() == (1, 0)
+    lcx.recv_x(jnp.float32(0.0)).tag(2).matching_engine(ueng)()
+    assert ueng.pending() == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Dead devices: NodeFailure -> fatal drain -> elastic_reshard
+# ---------------------------------------------------------------------------
+def test_dead_device_drains_fatal():
+    lcx.init()
+    dev = lcx.Device()
+    sync = lcx.Synchronizer()
+    lcx.put_x(jnp.ones(2)).remote_comp(sync).device(dev)()
+    assert fail_device(dev) == 1
+    assert not dev.alive
+    (ev,) = sync.wait(raise_on_error=False)
+    assert ev.status is lcx.ErrorCode.FATAL
+    assert lcx.runtime().pending_count() == 0
+    # posting again to the dead device also drains as fatal at progress
+    sync2 = lcx.Synchronizer()
+    lcx.put_x(jnp.ones(2)).remote_comp(sync2).device(dev)()
+    lcx.progress()
+    (ev2,) = sync2.wait(raise_on_error=False)
+    assert ev2.status is lcx.ErrorCode.FATAL
+
+
+def test_node_failure_feeds_elastic_reshard():
+    """The ISSUE's end-to-end story: an injected NodeFailure kills the
+    device, pending comm drains fatal (nobody hangs), and live state
+    moves on via elastic_reshard."""
+    lcx.init()
+    dev = lcx.Device()
+    sync = lcx.Synchronizer()
+    lcx.put_x(jnp.arange(4.0)).remote_comp(sync).device(dev)()
+    inj = FailureInjector(fail_at=[2], lost_devices=1, devices=[dev])
+    state = {"w": jnp.arange(8.0)}
+    inj.check(1)
+    with pytest.raises(NodeFailure):
+        inj.check(2)
+    (ev,) = sync.wait(raise_on_error=False)
+    assert ev.status is lcx.ErrorCode.FATAL
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    new_state = elastic_reshard(state, {"w": sh})
+    np.testing.assert_array_equal(np.asarray(new_state["w"]),
+                                  np.arange(8.0))
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation in the AMT executor
+# ---------------------------------------------------------------------------
+def test_executor_fail_fast_default_still_raises():
+    lcx.init()
+    ex = amt.Executor()
+    ex.spawn(lambda ctx: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        ex.run()
+
+
+def test_executor_graceful_retry_then_success():
+    lcx.init()
+    ex = amt.Executor(fail_fast=False, max_task_retries=3,
+                      task_retry_backoff=1)
+    calls = {"n": 0}
+
+    def flaky(ctx):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise ValueError("flaky")
+        return 42
+
+    t = ex.spawn(flaky)
+    ex.run()
+    assert t.result == 42
+    assert t.state is amt.TaskState.DONE
+    st = ex.status_of(t)
+    assert st.attempts == 2 and st.state == "retrying"
+    assert ex.stats["task_retries"] == 2
+    assert not ex.dead_letter
+
+
+def test_executor_dead_letter_and_cascade():
+    lcx.init()
+    ex = amt.Executor(fail_fast=False, max_task_retries=1)
+    ok = ex.spawn(lambda ctx: "fine")
+
+    def hopeless(ctx):
+        raise ValueError("always")
+
+    bad = ex.spawn(hopeless)
+    child = ex.spawn(lambda ctx: 1, deps=(bad,))
+    stats = ex.run()                       # does NOT raise
+    assert ok.result == "fine"
+    assert bad.state is amt.TaskState.FAILED
+    assert ex.dead_letter == [bad]
+    assert ex.status_of(bad).state == "failed"
+    assert ex.status_of(bad).attempts == 2          # 1 try + 1 retry
+    # the dependent can never run: cascade-failed with a DependencyError
+    assert child.state is amt.TaskState.FAILED
+    assert ex.status_of(child).state == "cascade"
+    assert isinstance(child.error, amt.DependencyError)
+    assert stats["tasks_failed"] == 2
+
+
+def test_executor_survives_faulty_transport():
+    """Pipeline-ish workload: chained tasks communicating over a lossy
+    loopback transport complete correctly via comm retries, with the
+    executor's deadlock detector tolerating in-flight backoff."""
+    lcx.init()
+    lcx.install_transport(lcx.FaultyTransport(seed=5, drop=0.1, delay=0.1))
+    ex = amt.Executor(fail_fast=False)
+    results = []
+
+    def stage(ctx, i):
+        ctx.put(jnp.float32(i), None, tag=i, max_retries=8)
+        return ctx.suspend(lambda ev: results.append(float(ev.payload)))
+
+    prev = None
+    for i in range(8):
+        prev = ex.spawn(lambda ctx, _i=i: stage(ctx, _i),
+                        deps=(prev,) if prev else ())
+    ex.run()
+    assert sorted(results) == [float(i) for i in range(8)]
+    assert lcx.runtime().transport.stats["drops"] > 0
+
+
+def test_executor_comm_timeout_event_not_teardown():
+    """An unmatched recv with a deadline resumes its task with a
+    timeout-status event — the executor keeps running, nothing hangs."""
+    lcx.init()
+    ex = amt.Executor()
+    seen = []
+
+    def waiter(ctx):
+        ctx.recv(jnp.zeros(2), None, tag=99, timeout=3)
+        return ctx.suspend(lambda ev: seen.append(ev.status))
+
+    after = ex.spawn(lambda ctx: "ran", deps=(ex.spawn(waiter),))
+    ex.run()
+    assert seen == [lcx.ErrorCode.TIMEOUT]
+    assert after.result == "ran"
+
+
+# ---------------------------------------------------------------------------
+# Remote spawning error replies
+# ---------------------------------------------------------------------------
+def test_remote_unknown_handler_resolves_remote_failure():
+    lcx.init()
+    amt.clear_task_handlers()
+    ex = amt.Executor()
+    sp = amt.RemoteSpawner(ex)
+    amt.register_task_handler("ghost", lambda p: p)
+    promise = sp.spawn("ghost", jnp.float32(1.0), lcx.Perm.shift(0))
+    # simulate the handler missing on the destination rank
+    amt.clear_task_handlers()
+    ex.run()
+    res = promise.result
+    assert isinstance(res, amt.RemoteFailure)
+    assert res.status == "unknown_handler" and not res.ok
+    assert sp.stats["unknown_handlers"] == 1
+
+
+def test_remote_handler_exception_resolves_remote_failure():
+    lcx.init()
+    amt.clear_task_handlers()
+    ex = amt.Executor()
+    sp = amt.RemoteSpawner(ex)
+    amt.register_task_handler("boom", lambda p: 1 / 0)
+    amt.register_task_handler("double", lambda p: p * 2)
+    p_bad = sp.spawn("boom", jnp.float32(1.0), lcx.Perm.shift(0))
+    p_ok = sp.spawn("double", jnp.float32(3.0), lcx.Perm.shift(0))
+    ex.run()
+    assert isinstance(p_bad.result, amt.RemoteFailure)
+    assert p_bad.result.status == "handler_error"
+    assert "ZeroDivisionError" in p_bad.result.message
+    assert float(p_ok.result) == 6.0      # healthy traffic unaffected
+    assert sp.stats["handler_errors"] == 1
+    amt.clear_task_handlers()
+
+
+# ---------------------------------------------------------------------------
+# Ranked (vmap-emulated axis) acceptance: pingpong under 10% faults
+# ---------------------------------------------------------------------------
+def test_ranked_pingpong_under_seeded_faults():
+    """Acceptance criterion: a ring pingpong under 10% seeded drop +
+    10% delay completes with correct results via retries."""
+
+    def body(x):
+        lcx.init()
+        lcx.install_transport(lcx.FaultyTransport(seed=7, drop=0.1,
+                                                  delay=0.1))
+        dev = lcx.Device(axis="x")
+        ping = lcx.Synchronizer()
+        lcx.put_x(x).perm(lcx.Perm.shift(1)).remote_comp(ping) \
+            .device(dev).max_retries(8)()
+        for _ in range(64):
+            lcx.progress()
+            if ping.ready() and not lcx.runtime().has_inflight():
+                break
+        (ev,) = ping.wait()
+        assert ev.status.ok
+        pong = lcx.Synchronizer()
+        lcx.put_x(ev.payload).perm(lcx.Perm.shift(-1)).remote_comp(pong) \
+            .device(dev).max_retries(8)()
+        for _ in range(64):
+            lcx.progress()
+            if pong.ready() and not lcx.runtime().has_inflight():
+                break
+        (ev2,) = pong.wait()
+        assert ev2.status.ok
+        return ev2.payload
+
+    out = ranked(body)
+    # ping shifts my value right, pong returns it: identity round trip
+    np.testing.assert_allclose(np.asarray(out), np.arange(float(N)))

@@ -12,7 +12,8 @@ from repro.configs.base import ModelConfig
 from repro.checkpoint import (AsyncCheckpointer, latest_step, list_steps,
                               restore_checkpoint, save_checkpoint)
 from repro.runtime import (FailureInjector, NodeFailure, StragglerMonitor,
-                           TrainConfig, Trainer, shrink_mesh_shape)
+                           TrainConfig, Trainer, elastic_reshard,
+                           shrink_mesh_shape)
 
 
 def tiny_cfg(**kw):
@@ -116,11 +117,53 @@ def test_straggler_monitor_flags_and_recommends_remesh():
     assert len(mon.events) == 3
 
 
+def test_straggler_monitor_ema_freeze_on_slow_streak():
+    """Slow steps must not poison the EMA baseline — only healthy
+    steps fold in, so a persistent straggler is still detected against
+    the pre-slowdown baseline."""
+    mon = StragglerMonitor(threshold=2.0, patience=3, ema_decay=0.5)
+    mon.observe(0, 1.0)
+    ema0 = mon.ema
+    assert mon.observe(1, 10.0) == "slow"
+    assert mon.observe(2, 10.0) == "slow"
+    assert mon.ema == ema0               # frozen during the streak
+    assert mon.observe(3, 10.0) == "remesh"
+    assert mon.slow_streak == 0          # reset after the recommendation
+    assert mon.ema == ema0
+    mon.observe(4, 1.2)                  # healthy step updates the EMA
+    assert mon.ema == pytest.approx(0.5 * ema0 + 0.5 * 1.2)
+
+
+def test_elastic_reshard_round_trip():
+    dev = jax.devices()[0]
+    sh = jax.sharding.SingleDeviceSharding(dev)
+    tree = {"w": jnp.arange(8.0).reshape(2, 4), "b": jnp.ones((3,))}
+    out = elastic_reshard(tree, {"w": sh, "b": sh})
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  np.asarray(tree["b"]))
+    assert out["w"].sharding.is_equivalent_to(sh, out["w"].ndim)
+
+
 def test_shrink_mesh_shape():
-    assert shrink_mesh_shape({"data": 16, "model": 16}, lost=1) == \
+    # each halving of data=16 removes data/2 * model = 8*16 = 128
+    # actual devices — one halving covers any small loss (the old
+    # `covered*2+1` accounting over-shrunk lost=3 to data=4)
+    for lost in (1, 2, 5):
+        assert shrink_mesh_shape({"data": 16, "model": 16}, lost=lost) \
+            == {"data": 8, "model": 16}
+    # without a model axis the per-halving coverage is data/2
+    assert shrink_mesh_shape({"data": 8}, lost=1) == {"data": 4}
+    assert shrink_mesh_shape({"data": 8}, lost=2) == {"data": 4}
+    assert shrink_mesh_shape({"data": 8}, lost=5) == {"data": 2}
+    # "all lost": halve until the data axis is exhausted
+    assert shrink_mesh_shape({"data": 8}, lost=8) == {"data": 1}
+    assert shrink_mesh_shape({"data": 16, "model": 16}, lost=256) == \
+        {"data": 1, "model": 16}
+    # any loss forces at least one halving; data=1 cannot shrink
+    assert shrink_mesh_shape({"data": 16, "model": 16}, lost=0) == \
         {"data": 8, "model": 16}
-    assert shrink_mesh_shape({"data": 16, "model": 16}, lost=3) == \
-        {"data": 4, "model": 16}
     assert shrink_mesh_shape({"data": 1, "model": 16}, lost=2) == \
         {"data": 1, "model": 16}
 
