@@ -1,0 +1,153 @@
+"""Device-isolation benchmark: per-device post+match throughput with and
+without a second busy device.
+
+The point of the resource hierarchy (paper feature (b), and the
+HPX+LCI / LCI-performance papers' per-thread-device results) is that a
+library or thread posting on its *own* device must not contend with
+another device's traffic — no shared matching-engine buckets, no shared
+transfer ledger scans.
+
+Workload: a "foreground" device posts D send/recv pairs (distinct tags,
+recvs in reverse order) and drains them with per-device progress.  We
+measure foreground ops/s in three configurations:
+
+1. ``solo``          — foreground device alone on its runtime.
+2. ``busy-neighbor`` — a second isolated device on the SAME runtime
+   carries ``load×D`` pre-posted pending pairs the whole time.
+3. ``shared-legacy`` — the "before" picture: foreground and the same
+   busy load share ONE engine + ledger (two floating devices on the
+   global-style defaults), so the neighbor's pending ops sit in the
+   same buckets and ledger.
+
+Isolation holds when (2) tracks (1) (ratio ~1.0) while (3) degrades.
+Emits ``BENCH_isolation.json``; ``--smoke`` trims depths for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import repro.core as lcx
+
+DEPTHS = (256, 1024, 4096)
+
+
+class _FakeBuf:
+    """Shape/dtype carrier — keeps the benchmark allocation-free."""
+
+    shape = (8,)
+    dtype = np.float32
+
+
+def _post_pairs(n: int, *, device, tag0: int = 0) -> None:
+    buf = _FakeBuf()
+    for i in range(n):
+        lcx.send_x(buf).tag(tag0 + i).device(device)()
+    for i in reversed(range(n)):
+        lcx.recv_x(buf).tag(tag0 + i).device(device)()
+
+
+def _drain(device) -> None:
+    # loopback devices: transfers land in one progress call
+    lcx.progress_x().device(device)()
+
+
+def bench_foreground(depth: int, mode: str, load: int) -> Dict[str, Any]:
+    """Time `depth` foreground post+match+progress ops under `mode`."""
+    rt = lcx.Runtime(name=f"iso-{mode}")
+    if mode == "shared-legacy":
+        # two floating devices sharing the runtime's default engine and
+        # device-less ledger — the pre-hierarchy contention picture
+        fg = rt.default_device
+        neighbor = rt.default_device
+    else:
+        fg = rt.device(name="fg")
+        neighbor = rt.device(name="bg") if mode == "busy-neighbor" else None
+    if mode != "solo" and neighbor is not None:
+        # park load*depth matched-but-unprogressed pairs on the neighbor
+        if mode == "shared-legacy":
+            _post_pairs(load * depth, device=neighbor, tag0=10_000_000)
+        else:
+            _post_pairs(load * depth, device=neighbor)
+    # GC off inside the timed region: cyclic-collector sweeps over the
+    # neighbor's parked PostedOps would otherwise bill the *collector*'s
+    # O(live objects) to the foreground and mask the engine's behaviour.
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        _post_pairs(depth, device=fg)
+        _drain(fg)
+        dt = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    n_ops = 2 * depth + 1
+    # neighbor load stays pending the whole run (that is the point);
+    # clean it up outside the timed region
+    rt.finalize(strict=False)
+    return {"mode": mode, "depth": depth, "seconds": dt,
+            "ops_per_s": n_ops / dt}
+
+
+def main(argv: List[str] | None = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--load", type=int, default=4,
+                    help="neighbor pending load as a multiple of depth")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_isolation.json")
+    args = ap.parse_args(argv)
+
+    lcx.init()
+    depths = (64, 256) if args.smoke else DEPTHS
+    rows: List[Dict[str, Any]] = []
+    print(f"{'depth':>6} {'solo Mops/s':>12} {'busy-nbr':>10} "
+          f"{'shared':>10} {'iso ratio':>10}")
+    for depth in depths:
+        best: Dict[str, Dict[str, Any]] = {}
+        for mode in ("solo", "busy-neighbor", "shared-legacy"):
+            runs = [bench_foreground(depth, mode, args.load)
+                    for _ in range(args.repeats)]
+            best[mode] = max(runs, key=lambda r: r["ops_per_s"])
+        ratio = (best["busy-neighbor"]["ops_per_s"]
+                 / best["solo"]["ops_per_s"])
+        shared_ratio = (best["shared-legacy"]["ops_per_s"]
+                        / best["solo"]["ops_per_s"])
+        row = {"depth": depth, "load": args.load,
+               "solo_ops_per_s": best["solo"]["ops_per_s"],
+               "busy_neighbor_ops_per_s":
+                   best["busy-neighbor"]["ops_per_s"],
+               "shared_legacy_ops_per_s":
+                   best["shared-legacy"]["ops_per_s"],
+               "isolation_ratio": ratio,
+               "shared_ratio": shared_ratio}
+        rows.append(row)
+        print(f"{depth:6d} {row['solo_ops_per_s'] / 1e6:12.3f} "
+              f"{row['busy_neighbor_ops_per_s'] / 1e6:10.3f} "
+              f"{row['shared_legacy_ops_per_s'] / 1e6:10.3f} "
+              f"{ratio:10.2f}")
+
+    out = {"rows": rows, "smoke": bool(args.smoke), "load": args.load,
+           "repeats": args.repeats}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    worst = min(r["isolation_ratio"] for r in rows)
+    print("ISOLATIONBENCH_JSON=" + json.dumps(
+        {"worst_isolation_ratio": worst,
+         "depths": [r["depth"] for r in rows]}))
+    lcx.finalize(strict=False)
+    return out
+
+
+if __name__ == "__main__":
+    main()

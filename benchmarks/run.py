@@ -10,6 +10,8 @@ Sections:
 4. moe_dispatch      — EP a2a dispatch throughput (LCX a2a backends)
 5. kernels_bench     — Pallas kernels vs oracles
 6. chaosbench        — seeded fault-injection sweep (convergence)
+7. isolationbench    — per-device throughput isolation (resource
+                       hierarchy), emits BENCH_isolation.json
 CSV outputs land in results/.
 """
 import argparse
@@ -69,6 +71,15 @@ def main() -> None:
     print("=" * 72)
     import chaosbench
     chaosbench.main(["--smoke"] if args.fast else [])
+
+    print("=" * 72)
+    print("6. device isolation (busy neighbor must not steal throughput)")
+    print("=" * 72)
+    import isolationbench
+    ib_args = ["--out", "results/BENCH_isolation.json"]
+    if args.fast:
+        ib_args.append("--smoke")
+    isolationbench.main(ib_args)
 
     print("benchmarks complete; CSVs in results/")
 

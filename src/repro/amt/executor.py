@@ -83,12 +83,14 @@ class TaskContext:
             max_retries: int = 0) -> None:
         """Post a one-sided put whose *remote* completion retires through
         the executor (the receiving side's suspended task resumes)."""
-        dev = device or self.executor.device
+        ex = self.executor
+        dev = device or ex.device
         lcx.put_x(buffer).perm(perm).tag(tag) \
-            .remote_comp(self.executor.cq).ctx(self.task) \
+            .remote_comp(ex.cq).ctx(self.task) \
+            .runtime(ex._runtime).endpoint(None if device else ex.endpoint) \
             .device(dev).allow_aggregation(allow_aggregation) \
             .timeout(timeout).max_retries(max_retries)()
-        self.executor._note_post()
+        ex._note_post()
 
     def am(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
            tag: int = 0, remote_comp: Optional[Any] = None,
@@ -96,29 +98,35 @@ class TaskContext:
            device: Optional[lcx.Device] = None) -> None:
         """Post an active message.  Defaults the remote completion to the
         executor's retirement queue with this task as context."""
-        dev = device or self.executor.device
+        ex = self.executor
+        dev = device or ex.device
         lcx.am_x(buffer).perm(perm).tag(tag) \
-            .remote_comp(remote_comp or self.executor.cq) \
+            .remote_comp(remote_comp or ex.cq) \
+            .runtime(ex._runtime).endpoint(None if device else ex.endpoint) \
             .ctx(self.task if context is None else context).device(dev)()
-        self.executor._note_post()
+        ex._note_post()
 
     def send(self, buffer: Any, perm: Optional[lcx.Perm] = None, *,
              tag: int = 0, device: Optional[lcx.Device] = None,
              timeout: Optional[int] = None, max_retries: int = 0) -> None:
-        dev = device or self.executor.device
-        lcx.send_x(buffer).perm(perm).tag(tag).comp(self.executor.cq) \
+        ex = self.executor
+        dev = device or ex.device
+        lcx.send_x(buffer).perm(perm).tag(tag).comp(ex.cq) \
             .ctx(self.task).device(dev) \
+            .runtime(ex._runtime).endpoint(None if device else ex.endpoint) \
             .timeout(timeout).max_retries(max_retries)()
-        self.executor._note_post()
+        ex._note_post()
 
     def recv(self, like: Any, perm: Optional[lcx.Perm] = None, *,
              tag: int = 0, device: Optional[lcx.Device] = None,
              timeout: Optional[int] = None, max_retries: int = 0) -> None:
-        dev = device or self.executor.device
-        lcx.recv_x(like).perm(perm).tag(tag).comp(self.executor.cq) \
+        ex = self.executor
+        dev = device or ex.device
+        lcx.recv_x(like).perm(perm).tag(tag).comp(ex.cq) \
             .ctx(self.task).device(dev) \
+            .runtime(ex._runtime).endpoint(None if device else ex.endpoint) \
             .timeout(timeout).max_retries(max_retries)()
-        self.executor._note_post()
+        ex._note_post()
 
     # -- suspension ----------------------------------------------------------
     def suspend(self, k: Optional[Callable[..., Any]] = None,
@@ -151,6 +159,8 @@ class Executor:
     def __init__(self, device: Optional[lcx.Device] = None,
                  pool: Optional[lcx.PacketPool] = None,
                  graph: Optional[TaskGraph] = None, *,
+                 runtime: Optional[lcx.Runtime] = None,
+                 endpoint: Optional[lcx.Endpoint] = None,
                  progress_every: int = 8,
                  adaptive_progress: bool = True,
                  max_inflight: Optional[int] = None,
@@ -171,6 +181,22 @@ class Executor:
         self.dead_letter: List[Task] = []
         self.task_status: Dict[int, TaskStatus] = {}
         self._deferred: List[Tuple[int, int, Task]] = []  # (cycle, tie, task)
+        # Resource injection (library-interop pattern): an executor given
+        # an explicit runtime / endpoint / device keeps all its traffic on
+        # those resources; with none it shares the global default runtime
+        # (lazily created) so independently constructed executors can
+        # still exchange active messages.
+        self.endpoint = endpoint
+        if device is None and endpoint is not None:
+            device = endpoint.device
+        if runtime is None:
+            if endpoint is not None and endpoint.runtime is not None:
+                runtime = endpoint.runtime
+            elif device is not None and device.runtime is not None:
+                runtime = device.runtime
+        self._runtime = runtime
+        if device is None and runtime is not None:
+            device = runtime.default_device
         self.device = device if device is not None else lcx.Device()
         self.pool = pool
         self.graph = graph or TaskGraph()
@@ -202,6 +228,12 @@ class Executor:
         # (comp, k, promise) triples checked after each progress call
         self._watches: List[Tuple[Any, Callable[[Any], Any], Task]] = []
         self._activity = 0
+
+    @property
+    def runtime(self) -> lcx.Runtime:
+        """The runtime this executor posts/progresses against (injected,
+        else the global default)."""
+        return self._runtime if self._runtime is not None else lcx.runtime()
 
     # -- submission -----------------------------------------------------------
     def spawn(self, fn: Callable[..., Any], *,
@@ -254,11 +286,11 @@ class Executor:
             self._release_deferred()
             while self._heap:
                 deferred = False
-                while lcx.runtime().pending_count() >= self.max_inflight:
+                while self.runtime.pending_count() >= self.max_inflight:
                     self.stats["backpressure_stalls"] += 1
-                    pending_before = lcx.runtime().pending_count()
+                    pending_before = self.runtime.pending_count()
                     self._progress_and_retire()
-                    if lcx.runtime().pending_count() >= pending_before:
+                    if self.runtime.pending_count() >= pending_before:
                         # progress could not shrink the ledger — admitting
                         # more work would only deepen it; defer until the
                         # outer flush (or an external drain) frees packets
@@ -279,7 +311,7 @@ class Executor:
             if not self.graph.unfinished():
                 break
             if self._activity == before:
-                if self._deferred or lcx.runtime().has_inflight():
+                if self._deferred or self.runtime.has_inflight():
                     # Not a deadlock: backed-off task retries and/or comm
                     # retries/timeouts are still pending — keep driving
                     # progress so their tick deadlines can elapse.
@@ -389,7 +421,7 @@ class Executor:
         self._activity += 1
 
     def _progress_and_retire(self) -> int:
-        op = lcx.progress_x()
+        op = lcx.progress_x().runtime(self._runtime)
         if self.pool is not None:
             op = op.pool(self.pool)
         op()

@@ -75,8 +75,12 @@ class RemoteSpawner:
     """Remote-spawn endpoint bound to one executor (one per rank)."""
 
     def __init__(self, executor: Executor,
-                 device: Optional[lcx.Device] = None) -> None:
+                 device: Optional[lcx.Device] = None,
+                 endpoint: Optional[lcx.Endpoint] = None) -> None:
         self.executor = executor
+        self.endpoint = endpoint if endpoint is not None else executor.endpoint
+        if device is None and endpoint is not None:
+            device = endpoint.device
         self.device = device or executor.device
         self._fh = lcx.FunctionHandler(self._deliver)
         self._reply_fh = lcx.FunctionHandler(self._deliver_reply)
@@ -104,6 +108,7 @@ class RemoteSpawner:
             promise = self.executor.promise(name=f"reply:{name}:{reply_id}")
             self._pending_replies[reply_id] = promise
         lcx.am_x(payload).perm(perm).tag(tag).remote_comp(self._fh) \
+            .runtime(self.executor._runtime).endpoint(self.endpoint) \
             .ctx({"handler": name, "reply_id": reply_id, "perm": perm,
                   "priority": priority}).device(self.device)()
         self.executor._note_post()
@@ -120,6 +125,7 @@ class RemoteSpawner:
         if info["reply_id"]:
             lcx.am_x(jnp.zeros(())).perm(info["perm"].inverse()) \
                 .remote_comp(self._reply_fh) \
+                .runtime(self.executor._runtime).endpoint(self.endpoint) \
                 .ctx({"reply_id": info["reply_id"], "status": status,
                       "error": message, "handler": info["handler"]}) \
                 .device(self.device)()
@@ -146,6 +152,7 @@ class RemoteSpawner:
             if _info["reply_id"]:
                 lcx.am_x(result).perm(_info["perm"].inverse()) \
                     .remote_comp(self._reply_fh) \
+                    .runtime(self.executor._runtime).endpoint(self.endpoint) \
                     .ctx({"reply_id": _info["reply_id"]}) \
                     .device(self.device)()
                 ctx.executor._note_post()

@@ -30,13 +30,14 @@ executor ↔ completion-object contract; ``repro.parallel.pipeline`` and
 from .flex import FlexOp, REQUIRED, plain
 from .attr import (get_global_attr, reset_global_attrs, set_global_attr)
 from .resources import (CompletionError, CompletionObject, CompletionQueue,
-                        CounterCompletion, Device, ErrorCode, Event,
+                        CounterCompletion, Device, Endpoint, ErrorCode, Event,
                         FaultPolicy, FaultyTransport, FunctionHandler,
-                        MatchingEngine, MemoryRegion, PacketPool, Perm,
-                        PostedOp, Synchronizer, IMMEDIATE_RCOMP_BITS,
+                        MatchingEngine, MemoryRegion, NetContext, PacketPool,
+                        Perm, PostedOp, ResolvedResources, Runtime,
+                        Synchronizer, IMMEDIATE_RCOMP_BITS,
                         IMMEDIATE_TAG_BITS, MAX_RCOMP_BITS, MAX_TAG_BITS,
-                        finalize, init, install_transport, runtime,
-                        signal_error)
+                        finalize, init, install_transport, resolve_resources,
+                        runtime, signal_error)
 from .ops import (PostHandle, am, am_x, cancel, get, get_x, progress,
                   progress_x, put, put_x, recv, recv_x, register_memory,
                   register_rcomp, send, send_x, sendrecv)
@@ -48,12 +49,13 @@ __all__ = [
     "FlexOp", "REQUIRED", "plain",
     "get_global_attr", "set_global_attr", "reset_global_attrs",
     "CompletionError", "CompletionObject", "CompletionQueue",
-    "CounterCompletion", "Device", "ErrorCode", "Event", "FaultPolicy",
-    "FaultyTransport", "FunctionHandler", "MatchingEngine", "MemoryRegion",
-    "PacketPool", "Perm", "PostedOp", "Synchronizer",
+    "CounterCompletion", "Device", "Endpoint", "ErrorCode", "Event",
+    "FaultPolicy", "FaultyTransport", "FunctionHandler", "MatchingEngine",
+    "MemoryRegion", "NetContext", "PacketPool", "Perm", "PostedOp",
+    "ResolvedResources", "Runtime", "Synchronizer",
     "IMMEDIATE_RCOMP_BITS", "IMMEDIATE_TAG_BITS", "MAX_RCOMP_BITS",
-    "MAX_TAG_BITS", "finalize", "init", "install_transport", "runtime",
-    "signal_error",
+    "MAX_TAG_BITS", "finalize", "init", "install_transport",
+    "resolve_resources", "runtime", "signal_error",
     "PostHandle", "am", "am_x", "cancel", "get", "get_x", "progress",
     "progress_x", "put", "put_x", "recv", "recv_x", "register_memory",
     "register_rcomp", "send", "send_x", "sendrecv",

@@ -18,27 +18,32 @@ import jax.numpy as jnp
 from jax import lax
 
 from .flex import FlexOp, plain
-from .resources import Device, Perm, Synchronizer, runtime
+from .resources import (Device, Endpoint, Perm, Runtime, Synchronizer,
+                        resolve_resources)
 from . import ops as lcx_ops
 
 
-def _axis_of(device: Optional[Device]) -> str:
-    dev = device if device is not None else runtime().default_device
+def _resolve_dev(op: FlexOp) -> tuple:
+    """(runtime, device) for a collective op, resolved through the same
+    endpoint -> device -> runtime-defaults path as the posting ops."""
+    res = resolve_resources(runtime=op.arg_or("runtime", None),
+                            endpoint=op.arg_or("endpoint", None),
+                            device=op.arg_or("device", None))
+    return res.runtime, res.device
+
+
+def _axis_of(dev: Device) -> str:
     if dev.axis is None:
         raise ValueError("collective needs a device bound to a mesh axis")
     return dev.axis
 
 
-def _dev(device: Optional[Device]) -> Device:
-    return device if device is not None else runtime().default_device
-
-
-def _lcx_shift(x: Any, k: int, device: Device, tag: int) -> Any:
+def _lcx_shift(x: Any, k: int, rt: Runtime, device: Device, tag: int) -> Any:
     """One ring hop expressed as an LCX put + progress + completion."""
     sync = Synchronizer(threshold=1)
     lcx_ops.put_x(x).perm(Perm.shift(k)).tag(tag).remote_comp(sync) \
-        .device(device)()
-    lcx_ops.progress_x().device(device)()
+        .runtime(rt).device(device)()
+    lcx_ops.progress_x().runtime(rt).device(device)()
     (ev,) = sync.wait()
     return ev.payload
 
@@ -51,11 +56,12 @@ class all_gather_x(FlexOp):
     dim 0), ring or native backend."""
 
     _positional = ("x",)
-    _optional = dict(device=None, backend="ring", tiled=True, tag=0)
+    _optional = dict(device=None, runtime=None, endpoint=None,
+                     backend="ring", tiled=True, tag=0)
 
     def _invoke(self) -> Any:
         x = self.arg("x")
-        dev = _dev(self.arg_or("device", None))
+        rt, dev = _resolve_dev(self)
         axis = _axis_of(dev)
         backend = self.arg_or("backend", "ring")
         tiled = self.arg_or("tiled", True)
@@ -67,7 +73,7 @@ class all_gather_x(FlexOp):
         buf = lax.dynamic_update_index_in_dim(buf, x, idx, 0)
         cur = x
         for step in range(n - 1):
-            cur = _lcx_shift(cur, 1, dev, self.arg_or("tag", 0))
+            cur = _lcx_shift(cur, 1, rt, dev, self.arg_or("tag", 0))
             src = (idx - step - 1) % n
             buf = lax.dynamic_update_index_in_dim(buf, cur, src, 0)
         if tiled:
@@ -84,11 +90,12 @@ class reduce_scatter_x(FlexOp):
     1/N slice of dim 0."""
 
     _positional = ("x",)
-    _optional = dict(device=None, backend="ring", tag=0)
+    _optional = dict(device=None, runtime=None, endpoint=None,
+                     backend="ring", tag=0)
 
     def _invoke(self) -> Any:
         x = self.arg("x")
-        dev = _dev(self.arg_or("device", None))
+        rt, dev = _resolve_dev(self)
         axis = _axis_of(dev)
         if self.arg_or("backend", "ring") == "native":
             return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
@@ -105,7 +112,7 @@ class reduce_scatter_x(FlexOp):
         acc = lax.dynamic_index_in_dim(chunks, (idx - 1) % n, 0,
                                        keepdims=False)
         for step in range(n - 1):
-            acc = _lcx_shift(acc, 1, dev, self.arg_or("tag", 0))
+            acc = _lcx_shift(acc, 1, rt, dev, self.arg_or("tag", 0))
             take = (idx - step - 2) % n
             acc = acc + lax.dynamic_index_in_dim(chunks, take, 0,
                                                  keepdims=False)
@@ -117,11 +124,12 @@ class reduce_scatter_x(FlexOp):
 # ---------------------------------------------------------------------------
 class all_reduce_x(FlexOp):
     _positional = ("x",)
-    _optional = dict(device=None, backend="ring", tag=0)
+    _optional = dict(device=None, runtime=None, endpoint=None,
+                     backend="ring", tag=0)
 
     def _invoke(self) -> Any:
         x = self.arg("x")
-        dev = _dev(self.arg_or("device", None))
+        rt, dev = _resolve_dev(self)
         axis = _axis_of(dev)
         backend = self.arg_or("backend", "ring")
         if backend == "native":
@@ -132,9 +140,9 @@ class all_reduce_x(FlexOp):
         pad = (-flat.shape[0]) % n
         if pad:
             flat = jnp.pad(flat, (0, pad))
-        rs = reduce_scatter_x(flat).device(dev).backend(backend) \
-            .tag(self.arg_or("tag", 0))()
-        ag = all_gather_x(rs).device(dev).backend(backend) \
+        rs = reduce_scatter_x(flat).runtime(rt).device(dev) \
+            .backend(backend).tag(self.arg_or("tag", 0))()
+        ag = all_gather_x(rs).runtime(rt).device(dev).backend(backend) \
             .tag(self.arg_or("tag", 0) + 1)()
         if pad:
             ag = ag[:-pad]
@@ -149,11 +157,12 @@ class all_to_all_x(FlexOp):
     axis size times the chunk size; pairwise backend posts n-1 LCX puts."""
 
     _positional = ("x",)
-    _optional = dict(device=None, backend="pairwise", tag=0)
+    _optional = dict(device=None, runtime=None, endpoint=None,
+                     backend="pairwise", tag=0)
 
     def _invoke(self) -> Any:
         x = self.arg("x")
-        dev = _dev(self.arg_or("device", None))
+        rt, dev = _resolve_dev(self)
         axis = _axis_of(dev)
         n = dev.axis_size
         if x.shape[0] % n:
@@ -173,7 +182,7 @@ class all_to_all_x(FlexOp):
             # send the chunk destined for rank (idx+k); receive from (idx-k)
             piece = lax.dynamic_index_in_dim(chunks, (idx + k) % n, 0,
                                              keepdims=False)
-            got = _lcx_shift(piece, k, dev, self.arg_or("tag", 0) + k)
+            got = _lcx_shift(piece, k, rt, dev, self.arg_or("tag", 0) + k)
             out = lax.dynamic_update_index_in_dim(out, got, (idx - k) % n, 0)
         return out.reshape(x.shape)
 
@@ -182,20 +191,23 @@ class broadcast_x(FlexOp):
     """Broadcast from ``root`` (native masked-psum)."""
 
     _positional = ("x",)
-    _optional = dict(device=None, root=0)
+    _optional = dict(device=None, runtime=None, endpoint=None, root=0)
 
     def _invoke(self) -> Any:
         x = self.arg("x")
-        dev = _dev(self.arg_or("device", None))
+        _, dev = _resolve_dev(self)
         axis = _axis_of(dev)
         idx = lax.axis_index(axis)
         mask = (idx == self.arg_or("root", 0)).astype(x.dtype)
         return lax.psum(x * mask, axis)
 
 
-def barrier(device: Optional[Device] = None) -> None:
-    dev = _dev(device)
-    if dev.axis is not None:
+def barrier(device: Optional[Device] = None,
+            runtime: Optional[Runtime] = None,
+            endpoint: Optional[Endpoint] = None) -> None:
+    res = resolve_resources(runtime=runtime, endpoint=endpoint, device=device)
+    dev = res.device
+    if dev is not None and dev.axis is not None:
         lax.psum(jnp.zeros((), jnp.float32), dev.axis)
 
 

@@ -22,11 +22,12 @@ import numpy as np
 from jax import lax
 
 from .flex import FlexOp, plain
-from .resources import (CompletionObject, CompletionQueue, Device, ErrorCode,
-                        Event, FaultyTransport, FunctionHandler,
+from .resources import (CompletionObject, CompletionQueue, Device, Endpoint,
+                        ErrorCode, Event, FaultyTransport, FunctionHandler,
                         MatchingEngine, MemoryRegion, PacketPool, Perm,
-                        PostedOp, Synchronizer, IMMEDIATE_RCOMP_BITS,
-                        IMMEDIATE_TAG_BITS, MAX_RCOMP_BITS, MAX_TAG_BITS,
+                        PostedOp, ResolvedResources, Runtime, Synchronizer,
+                        IMMEDIATE_RCOMP_BITS, IMMEDIATE_TAG_BITS,
+                        MAX_RCOMP_BITS, MAX_TAG_BITS, resolve_resources,
                         runtime, signal_error)
 
 
@@ -45,14 +46,22 @@ def _nbytes(x: Any) -> int:
         x, "shape") else 0
 
 
-def _default_device(op: FlexOp) -> Device:
-    dev = op.arg_or("device", None)
-    return dev if dev is not None else runtime().default_device
-
-
-def _default_engine(op: FlexOp) -> MatchingEngine:
-    eng = op.arg_or("matching_engine", None)
-    return eng if eng is not None else runtime().default_engine
+def _resolve(op: FlexOp) -> ResolvedResources:
+    """Resolve the resource set for a posting op from its optional
+    ``.runtime(r)`` / ``.endpoint(ep)`` / ``.device(d)`` /
+    ``.matching_engine(e)`` handles — one path for every op (endpoint →
+    device → runtime defaults)."""
+    opt = type(op)._optional
+    res = resolve_resources(
+        runtime=op.arg_or("runtime", None),
+        endpoint=op.arg_or("endpoint", None),
+        device=op.arg_or("device", None),
+        engine=(op.arg_or("matching_engine", None)
+                if "matching_engine" in opt else None),
+        pool=op.arg_or("pool", None) if "pool" in opt else None)
+    if res.endpoint is not None and op.arg_or("endpoint", None) is not None:
+        res.endpoint.stats["posted"] += 1
+    return res
 
 
 def _default_comp(op: FlexOp) -> CompletionObject:
@@ -105,26 +114,27 @@ class send_x(FlexOp):
 
     _positional = ("buffer",)
     _optional = dict(perm=None, tag=0, comp=None, device=None,
-                     matching_engine=None, ctx=None, allow_aggregation=True,
+                     matching_engine=None, runtime=None, endpoint=None,
+                     ctx=None, allow_aggregation=True,
                      timeout=None, max_retries=0)
 
     def _invoke(self) -> PostHandle:
         buf = _as_array(self.arg("buffer"))
-        dev = _default_device(self)
-        eng = _default_engine(self)
+        res = _resolve(self)
+        rt, dev, eng = res.runtime, res.device, res.engine
         comp = _default_comp(self)
         tag = self.arg_or("tag", 0)
         _check_tag(tag, MAX_TAG_BITS, "send tag")
         op = PostedOp(kind="send", buffer=buf, perm=self.arg_or("perm", None),
                       tag=tag, comp=comp, device=dev,
-                      seq=runtime().next_seq(),
+                      seq=rt.next_seq(),
                       context=self.arg_or("ctx", None), op_name="send",
                       allow_aggregation=self.arg_or("allow_aggregation", True),
                       timeout=self.arg_or("timeout", None),
                       max_retries=self.arg_or("max_retries", 0))
         dev.stats["posted"] += 1
-        runtime().watch_deadline(op)
-        runtime().enqueue_matches(eng.post(op))
+        rt.watch_deadline(op)
+        rt.enqueue_matches(eng.post(op))
         return PostHandle(comp=comp, posted=op)
 
 
@@ -134,25 +144,25 @@ class recv_x(FlexOp):
 
     _positional = ("like",)
     _optional = dict(perm=None, tag=0, comp=None, device=None,
-                     matching_engine=None, ctx=None, timeout=None,
-                     max_retries=0)
+                     matching_engine=None, runtime=None, endpoint=None,
+                     ctx=None, timeout=None, max_retries=0)
 
     def _invoke(self) -> PostHandle:
         like = self.arg("like")
-        dev = _default_device(self)
-        eng = _default_engine(self)
+        res = _resolve(self)
+        rt, dev, eng = res.runtime, res.device, res.engine
         comp = _default_comp(self)
         tag = self.arg_or("tag", 0)
         _check_tag(tag, MAX_TAG_BITS, "recv tag")
         op = PostedOp(kind="recv", buffer=like,
                       perm=self.arg_or("perm", None), tag=tag, comp=comp,
-                      device=dev, seq=runtime().next_seq(),
+                      device=dev, seq=rt.next_seq(),
                       context=self.arg_or("ctx", None), op_name="recv",
                       timeout=self.arg_or("timeout", None),
                       max_retries=self.arg_or("max_retries", 0))
         dev.stats["posted"] += 1
-        runtime().watch_deadline(op)
-        runtime().enqueue_matches(eng.post(op))
+        rt.watch_deadline(op)
+        rt.enqueue_matches(eng.post(op))
         return PostHandle(comp=comp, posted=op)
 
 
@@ -167,21 +177,28 @@ class put_x(FlexOp):
 
     _positional = ("buffer",)
     _optional = dict(perm=None, tag=0, comp=None, remote_comp=None,
-                     device=None, ctx=None, allow_aggregation=True,
-                     timeout=None, max_retries=0)
+                     device=None, runtime=None, endpoint=None, ctx=None,
+                     allow_aggregation=True, timeout=None, max_retries=0)
 
     _OP = "put"
 
+    def _default_remote_comp(self, res: ResolvedResources
+                             ) -> Optional[CompletionObject]:
+        return None
+
     def _invoke(self) -> PostHandle:
         buf = _as_array(self.arg("buffer"))
-        dev = _default_device(self)
+        res = _resolve(self)
+        rt, dev = res.runtime, res.device
         comp = _default_comp(self)
         tag = self.arg_or("tag", 0)
         rcomp = self.arg_or("remote_comp", None)
+        if rcomp is None:
+            rcomp = self._default_remote_comp(res)
         if isinstance(rcomp, int):
-            rid, rcomp_obj = rcomp, runtime().rcomp(rcomp)
+            rid, rcomp_obj = rcomp, rt.rcomp(rcomp)
         elif rcomp is not None:
-            rid, rcomp_obj = runtime().register_rcomp(rcomp), rcomp
+            rid, rcomp_obj = rt.register_rcomp(rcomp), rcomp
         else:
             rid, rcomp_obj = 0, None
         if rcomp_obj is not None and self._OP == "put":
@@ -204,7 +221,7 @@ class put_x(FlexOp):
             raise ValueError("remote completion handler id too wide")
         send = PostedOp(kind="send", buffer=buf,
                         perm=self.arg_or("perm", None), tag=tag, comp=comp,
-                        device=dev, seq=runtime().next_seq(),
+                        device=dev, seq=rt.next_seq(),
                         context=self.arg_or("ctx", None), op_name=self._OP,
                         remote_comp=rcomp_obj,
                         allow_aggregation=self.arg_or(
@@ -217,8 +234,8 @@ class put_x(FlexOp):
                         context=self.arg_or("ctx", None), op_name=self._OP,
                         state="matched")
         dev.stats["posted"] += 1
-        runtime().watch_deadline(send)
-        runtime().enqueue_matches([(send, recv)])
+        rt.watch_deadline(send)
+        rt.enqueue_matches([(send, recv)])
         return PostHandle(comp=comp, posted=send)
 
 
@@ -226,14 +243,14 @@ class am_x(put_x):
     """Active message: payload transfer plus a *remote completion object of
     any type* (function handler, completion queue, synchronizer…) signalled
     at the destination (paper §2.2).  Defaults the remote completion to the
-    runtime's default completion queue."""
+    resolved completion queue (endpoint's, then device's, then the
+    runtime's default)."""
 
     _OP = "am"
 
-    def _invoke(self) -> PostHandle:
-        if self.arg_or("remote_comp", None) is None:
-            self._args["remote_comp"] = runtime().default_cq
-        return super()._invoke()
+    def _default_remote_comp(self, res: ResolvedResources
+                             ) -> Optional[CompletionObject]:
+        return res.cq
 
 
 class get_x(FlexOp):
@@ -241,18 +258,19 @@ class get_x(FlexOp):
     peer defined by ``perm`` (a src->dst pattern read *backwards*)."""
 
     _positional = ("like",)
-    _optional = dict(perm=None, tag=0, comp=None, device=None, ctx=None,
-                     timeout=None, max_retries=0)
+    _optional = dict(perm=None, tag=0, comp=None, device=None, runtime=None,
+                     endpoint=None, ctx=None, timeout=None, max_retries=0)
 
     def _invoke(self) -> PostHandle:
         like = _as_array(self.arg("like"))
-        dev = _default_device(self)
+        res = _resolve(self)
+        rt, dev = res.runtime, res.device
         comp = _default_comp(self)
         tag = self.arg_or("tag", 0)
         _check_tag(tag, MAX_TAG_BITS, "get tag")
         perm = self.arg_or("perm", None)
         send = PostedOp(kind="send", buffer=like, perm=perm, tag=tag,
-                        comp=None, device=dev, seq=runtime().next_seq(),
+                        comp=None, device=dev, seq=rt.next_seq(),
                         context=self.arg_or("ctx", None), op_name="get",
                         state="matched",
                         timeout=self.arg_or("timeout", None),
@@ -262,8 +280,8 @@ class get_x(FlexOp):
                         context=self.arg_or("ctx", None), op_name="get",
                         state="matched")
         dev.stats["posted"] += 1
-        runtime().watch_deadline(send)
-        runtime().enqueue_matches([(send, recv)])
+        rt.watch_deadline(send)
+        rt.enqueue_matches([(send, recv)])
         return PostHandle(comp=comp, posted=recv)
 
 
@@ -287,22 +305,42 @@ class progress_x(FlexOp):
     clock that op ``timeout`` deadlines and retry backoffs count in),
     releases due backoff re-posts, drains matches touching dead devices
     as ``fatal`` completions, routes live matches through the installed
-    :class:`~repro.core.resources.FaultyTransport` (if any), and expires
-    engine-pending ops past their deadline as ``timeout`` completions.
+    :class:`~repro.core.resources.FaultyTransport` (if any — resolved
+    per match: explicit ``transport=`` > send device's > recv device's >
+    runtime-wide fallback), and expires engine-pending ops past their
+    deadline as ``timeout`` completions.
+
+    Scoping: with no arguments, progresses the *global* runtime's entire
+    ledger.  ``.runtime(rt)`` progresses another runtime; ``.device(d)``
+    / ``.endpoint(ep)`` narrows to that device's ledger only (other
+    devices' pending traffic is untouched — per-device progress
+    isolation).
     """
 
     _positional = ()
     _optional = dict(device=None, pool=None, max_transfers=None,
-                     transport=None)
+                     transport=None, runtime=None, endpoint=None)
 
     def _invoke(self) -> int:
-        rt = runtime()
+        explicit_dev = self.arg_or("device", None)
+        ep = self.arg_or("endpoint", None)
+        dev_filter = explicit_dev
+        if dev_filter is None and ep is not None:
+            dev_filter = ep.device
+        rt = self.arg_or("runtime", None)
+        if rt is None and dev_filter is not None:
+            rt = dev_filter.runtime
+        if rt is None:
+            rt = runtime()
         rt.tick += 1
-        dev_filter = self.arg_or("device", None)
-        pool = self.arg_or("pool", None) or rt.default_pool
-        transport = self.arg_or("transport", None)
-        if transport is None:
-            transport = rt.transport
+        pool = self.arg_or("pool", None)
+        if pool is None and ep is not None:
+            pool = ep.pool
+        if pool is None and dev_filter is not None:
+            pool = dev_filter.pool
+        if pool is None:
+            pool = rt.default_pool
+        explicit_t = self.arg_or("transport", None)
         rt.release_retries()
         matches = rt.take_ready(dev_filter)
         n = 0
@@ -314,11 +352,24 @@ class progress_x(FlexOp):
                 else:
                     signal_error(s, r, ErrorCode.FATAL)
             live.sort(key=lambda m: m[0].seq)
-            if transport is not None:
-                live = transport.apply(live)
+            if explicit_t is not None:
+                live = explicit_t.apply(live, rt)
+            else:
+                # Per-device transports: resolve and apply per match in
+                # global seq order so a shared transport's seeded RNG
+                # consumes draws exactly as a single global one would.
+                routed: List[Tuple[PostedOp, PostedOp]] = []
+                for s, r in live:
+                    t = s.device.transport or r.device.transport \
+                        or rt.transport
+                    if t is None:
+                        routed.append((s, r))
+                    else:
+                        routed.extend(t.apply([(s, r)], rt))
+                live = routed
             if live:
                 limit = self.arg_or("max_transfers", None)
-                n = _execute(live, pool, limit)
+                n = _execute(rt, live, pool, limit)
             if dev_filter is not None:
                 dev_filter.stats["progressed"] += 1
         rt.expire_timeouts()
@@ -335,7 +386,7 @@ def _pack_class(dtype: Any) -> str:
     return "bytes"
 
 
-def _execute(matches: List[Tuple[PostedOp, PostedOp]],
+def _execute(rt: Runtime, matches: List[Tuple[PostedOp, PostedOp]],
              pool: Optional[PacketPool], limit: Optional[int]) -> int:
     """Group, aggregate, and run matched transfers.
 
@@ -363,18 +414,18 @@ def _execute(matches: List[Tuple[PostedOp, PostedOp]],
         cost = 0 if grp[0][0].device.axis is None else 1
         if limit is not None and cost and n_transfers + cost > limit:
             # out of transfer budget — leave the group pending
-            runtime().enqueue_matches(grp)
+            rt.enqueue_matches(grp)
             continue
         if key[0] == "agg":
             if pool is not None:
                 pool.stats["eager_msgs"] += len(grp)
             if len(grp) > 1:
-                _run_aggregated(grp, pool)
+                _run_aggregated(rt, grp, pool)
             else:
-                _run_single(*grp[0])
+                _run_single(rt, *grp[0])
         else:
             for s, r in grp:
-                _run_single(s, r)
+                _run_single(rt, s, r)
                 if pool is not None and s.device.axis is not None:
                     pool.stats["rendezvous_msgs"] += 1
                     pool.stats["raw_transfers"] += 1
@@ -412,10 +463,10 @@ def _corrupt_value(x: Any) -> Any:
     return lax.bitcast_convert_type(jnp.bitwise_not(b), dt)
 
 
-def _run_single(s: PostedOp, r: PostedOp) -> None:
+def _run_single(rt: Runtime, s: PostedOp, r: PostedOp) -> None:
     value = _permute(s.buffer, s.device, s.perm)
     _check_shapes(s, r)
-    _signal(s, r, value)
+    _signal(rt, s, r, value)
 
 
 @dataclasses.dataclass(eq=False)
@@ -434,19 +485,19 @@ class AggPlan:
     itemsizes: Tuple[int, ...]
 
 
-def _agg_plan(grp: List[Tuple[PostedOp, PostedOp]]) -> AggPlan:
+def _agg_plan(rt: Runtime, grp: List[Tuple[PostedOp, PostedOp]]) -> AggPlan:
     """Look up or build the aggregation plan for a seq-sorted group."""
     s0 = grp[0][0]
     dtypes = tuple(jnp.dtype(s.buffer.dtype) for s, _ in grp)
     shapes = tuple(tuple(s.buffer.shape) for s, _ in grp)
     pkey = s0.perm.key(s0.device.axis_size) if s0.perm else ()
     sig = (s0.device.axis, pkey, tuple(d.name for d in dtypes), shapes)
-    cache = runtime().agg_plans
+    cache = rt.agg_plans
     plan = cache.get(sig)
     if plan is not None:
-        runtime().plan_stats["hits"] += 1
+        rt.plan_stats["hits"] += 1
         return plan
-    runtime().plan_stats["misses"] += 1
+    rt.plan_stats["misses"] += 1
     mixed = len(set(dtypes)) > 1
     itemsizes = tuple(d.itemsize for d in dtypes)
     if mixed:
@@ -472,7 +523,7 @@ def _byte_view(x: Any) -> Any:
     return jnp.ravel(lax.bitcast_convert_type(x, jnp.uint8))
 
 
-def _run_aggregated(grp: List[Tuple[PostedOp, PostedOp]],
+def _run_aggregated(rt: Runtime, grp: List[Tuple[PostedOp, PostedOp]],
                     pool: Optional[PacketPool]) -> None:
     """Pack eager messages sharing (axis, perm) into one transfer.
 
@@ -482,7 +533,7 @@ def _run_aggregated(grp: List[Tuple[PostedOp, PostedOp]],
     grp = sorted(grp, key=lambda m: m[0].seq)
     for s, r in grp:
         _check_shapes(s, r)
-    plan = _agg_plan(grp)
+    plan = _agg_plan(rt, grp)
     if plan.mixed:
         flats = [_byte_view(s.buffer) for s, _ in grp]
     else:
@@ -499,10 +550,10 @@ def _run_aggregated(grp: List[Tuple[PostedOp, PostedOp]],
             if isz > 1:
                 piece = piece.reshape(sz // isz, isz)
             piece = lax.bitcast_convert_type(piece, dt)
-        _signal(s, r, piece.reshape(shape))
+        _signal(rt, s, r, piece.reshape(shape))
 
 
-def _signal(s: PostedOp, r: PostedOp, value: Any) -> None:
+def _signal(rt: Runtime, s: PostedOp, r: PostedOp, value: Any) -> None:
     """Deliver completions for an executed transfer.
 
     The receiver is signalled first: a full completion queue returns
@@ -525,7 +576,7 @@ def _signal(s: PostedOp, r: PostedOp, value: Any) -> None:
                                   context=r.context, status=r_status))
         if ret is ErrorCode.RETRY and r_status.ok:
             # completion-queue overflow: the delivery was not absorbed
-            if runtime().schedule_retry(s, r):
+            if rt.schedule_retry(s, r):
                 return                    # re-delivered after backoff
             s.state = r.state = "retry"
             if s.comp is not None:
@@ -549,15 +600,19 @@ def _signal(s: PostedOp, r: PostedOp, value: Any) -> None:
 # ---------------------------------------------------------------------------
 def sendrecv(buffer: Any, perm: Perm, tag: int = 0,
              device: Optional[Device] = None,
-             matching_engine: Optional[MatchingEngine] = None) -> Any:
+             matching_engine: Optional[MatchingEngine] = None,
+             runtime: Optional[Runtime] = None,
+             endpoint: Optional[Endpoint] = None) -> Any:
     """Matched shift: send along ``perm`` and receive the inbound message.
     Posts both sides, progresses, returns the received array."""
     sync = Synchronizer(threshold=2)
     send_x(buffer).perm(perm).tag(tag).comp(sync).device(device) \
-        .matching_engine(matching_engine)()
+        .matching_engine(matching_engine).runtime(runtime) \
+        .endpoint(endpoint)()
     recv_x(buffer).perm(perm).tag(tag).comp(sync).device(device) \
-        .matching_engine(matching_engine)()
-    progress_x()()
+        .matching_engine(matching_engine).runtime(runtime) \
+        .endpoint(endpoint)()
+    progress_x().runtime(runtime).device(device).endpoint(endpoint)()
     events = sync.wait()
     (payload,) = [e.payload for e in events if e.payload is not None]
     return payload
@@ -589,12 +644,16 @@ def cancel(handle: Any) -> bool:
     return True
 
 
-def register_memory(array: Any) -> MemoryRegion:
-    return runtime().register_memory(array)
+def register_memory(array: Any,
+                    runtime_: Optional[Runtime] = None) -> MemoryRegion:
+    rt = runtime_ if runtime_ is not None else runtime()
+    return rt.register_memory(array)
 
 
-def register_rcomp(comp: CompletionObject) -> int:
-    return runtime().register_rcomp(comp)
+def register_rcomp(comp: CompletionObject,
+                   runtime_: Optional[Runtime] = None) -> int:
+    rt = runtime_ if runtime_ is not None else runtime()
+    return rt.register_rcomp(comp)
 
 
 # Plain-function shorthands (binding guideline).

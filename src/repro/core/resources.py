@@ -1,11 +1,33 @@
 """LCX resources (paper §2.2).
 
-The interface consists of *resources* and *operations*.  Major resources:
+The interface consists of *resources* and *operations*, arranged in the
+paper's explicit hierarchy::
 
+    Runtime → NetContext → Device → Endpoint
+
+Every level is independently constructible and carries (or resolves to)
+its own matching engine, packet pool, and default completion resources;
+the process-global :func:`runtime` is merely a lazily created *default*
+instance (the paper's ``g_runtime`` idiom), not the only one.  Two
+runtimes — or two isolated devices on one runtime — can coexist in one
+process with independent ``pending()`` accounting, fault injection, and
+``finalize()`` leak checks.  See ``docs/resources.md``.
+
+Major resources:
+
+- :class:`Runtime` — top of the hierarchy: default resources, the
+  pending-transfer ledger, sequence/registry state, fault clocks.
+- :class:`NetContext` — one per network backend ("xla" / "pallas" /
+  "sim"); owns devices.
 - :class:`Device` — encapsulates the low-level network resource.  On TPU
   the "network" is the ICI mesh accessed through compiled collectives;
   a Device names a mesh axis (its communicator) plus a backend and
-  tunable attributes.
+  tunable attributes.  Hierarchy-created devices own a private matching
+  engine, packet pool, and completion queue (library/thread isolation);
+  bare ``Device(...)`` stays *floating* and shares the ambient runtime's
+  defaults, preserving the legacy single-pool behaviour.
+- :class:`Endpoint` — the posting resource on a device (one per thread
+  or library); may override the device's engine/pool/completion queue.
 - :class:`PacketPool` — pre-registered fixed-size internal buffers.  At
   the JAX level the pool enables *message aggregation*: many fine-grained
   eager-protocol messages are packed into one transfer (the TPU analogue
@@ -34,6 +56,7 @@ import dataclasses
 import enum
 import heapq
 import itertools
+import os
 import random
 import threading
 from collections import deque
@@ -625,16 +648,94 @@ class PacketPool(HasAttrs):
 
 
 # ---------------------------------------------------------------------------
+# NetContext
+# ---------------------------------------------------------------------------
+class NetContext(HasAttrs):
+    """The per-backend network context (second hierarchy level).
+
+    One net context per network backend: ``"xla"`` (compiled
+    collectives), ``"pallas"`` (remote-DMA kernels, TPU-only), ``"sim"``
+    (loopback).  A net context owns :class:`Device` objects; devices
+    created through :meth:`device` inherit the context's backend and own
+    private matching/pool/completion resources by default — the
+    library-interop pattern (one device per library) and the
+    per-thread-device isolation both hang off this level.
+    """
+
+    _ATTR_DEFAULTS = {
+        "backend": "xla",        # "xla" | "pallas" (TPU-only) | "sim"
+        "name": None,
+    }
+
+    def __init__(self, runtime: Optional["Runtime"] = None,
+                 backend: Optional[str] = None, **attrs: Any) -> None:
+        self._init_attrs({"backend": backend, **attrs})
+        if self._attrs["backend"] not in ("xla", "pallas", "sim"):
+            raise ValueError(
+                f"unknown net-context backend {self._attrs['backend']!r}")
+        self._runtime = runtime
+        self.devices: List["Device"] = []
+        self.default_device: Optional["Device"] = None
+        if runtime is not None:
+            runtime._attach_net_context(self)
+
+    @property
+    def runtime(self) -> Optional["Runtime"]:
+        return self._runtime
+
+    @property
+    def backend(self) -> str:
+        return self._attrs["backend"]
+
+    def device(self, axis: Optional[str] = None, **attrs: Any) -> "Device":
+        """Allocate a device on this context.  Unlike bare ``Device()``,
+        the device owns private resources (``own_resources=True``)
+        unless explicitly disabled."""
+        attrs.setdefault("own_resources", True)
+        attrs.setdefault("backend", self.backend)
+        return Device(axis=axis, net_context=self, **attrs)
+
+    def _attach_device(self, dev: "Device") -> None:
+        self.devices.append(dev)
+        if self.default_device is None:
+            self.default_device = dev
+
+    def pending(self) -> int:
+        """Matched-but-unprogressed transfers across this context's
+        devices (0 when unbound to a runtime)."""
+        rt = self._runtime
+        if rt is None:
+            return 0
+        return sum(rt.pending_for(d) for d in self.devices)
+
+    def __repr__(self) -> str:
+        name = self._attrs.get("name")
+        tag = f" {name!r}" if name else ""
+        return (f"NetContext<{self.backend}{tag}, "
+                f"{len(self.devices)} device(s)>")
+
+
+# ---------------------------------------------------------------------------
 # Device
 # ---------------------------------------------------------------------------
 class Device(HasAttrs):
-    """The per-communicator network resource.
+    """The per-communicator network resource (third hierarchy level).
 
     ``axis`` names the mesh axis this device communicates over (its
     "NIC port" onto the ICI torus); ``axis=None`` is the loopback/sim
     device used for single-process semantics tests.  Multiple devices on
     the same axis model LCI's device-per-thread isolation: their pending
     traffic is progressed independently (separate transfer schedules).
+
+    Devices allocated through the hierarchy (``net_ctx.device(...)`` /
+    ``rt.device(...)``) own a *private* matching engine, packet pool,
+    and completion queue plus a default :class:`Endpoint` — ops posted
+    on them cannot contend with (or match against) another device's
+    traffic.  A bare ``Device(axis=...)`` stays *floating*: it carries
+    no private resources and resolves them from the ambient runtime's
+    defaults (the legacy shared-engine behaviour — sends and recvs
+    posted on different floating devices still match when they share
+    the default engine).
     """
 
     _ATTR_DEFAULTS = {
@@ -643,13 +744,71 @@ class Device(HasAttrs):
         "max_inflight": 64,       # max transfers materialized per progress
         "allow_payload_metadata": True,
         "mesh_shape": None,       # optional dict axis->size when not in ctx
+        "own_resources": False,   # private engine/pool/cq (+ endpoint)
+        "name": None,
     }
 
-    def __init__(self, axis: Optional[str] = None, **attrs: Any) -> None:
+    def __init__(self, axis: Optional[str] = None,
+                 net_context: Optional[NetContext] = None,
+                 **attrs: Any) -> None:
         self._init_attrs({"axis": axis, **attrs})
         self.stats = {"posted": 0, "transfers": 0, "progressed": 0,
                       "bytes_moved": 0}
         self.alive = True
+        self._net_context = net_context
+        self.endpoints: List["Endpoint"] = []
+        self.transport: Optional["FaultyTransport"] = None
+        self.engine: Optional[MatchingEngine] = None
+        self.pool: Optional[PacketPool] = None
+        self.cq: Optional[CompletionQueue] = None
+        self.default_endpoint: Optional["Endpoint"] = None
+        if self._attrs["own_resources"]:
+            self.engine = MatchingEngine()
+            self.pool = PacketPool()
+            self.cq = CompletionQueue()
+            self.default_endpoint = self.endpoint()
+        if net_context is not None:
+            net_context._attach_device(self)
+
+    @property
+    def net_context(self) -> Optional[NetContext]:
+        return self._net_context
+
+    @property
+    def runtime(self) -> Optional["Runtime"]:
+        """The runtime this device hangs off (None when floating)."""
+        return self._net_context.runtime if self._net_context else None
+
+    def endpoint(self, matching_engine: Optional[MatchingEngine] = None,
+                 pool: Optional[PacketPool] = None,
+                 cq: Optional[CompletionQueue] = None,
+                 **attrs: Any) -> "Endpoint":
+        """Allocate a posting endpoint on this device, optionally with a
+        private matching engine / packet pool / completion queue."""
+        return Endpoint(self, matching_engine=matching_engine, pool=pool,
+                        cq=cq, **attrs)
+
+    def install_transport(
+            self, transport: Optional["FaultyTransport"]
+    ) -> Optional["FaultyTransport"]:
+        """Install (or, with ``None``, remove) a fault-injecting
+        transport on *this device only*: matched transfers whose send
+        side sits on this device route through it at progress time.
+        Returns the previous transport.  The module-level
+        :func:`install_transport` delegates here for every device of the
+        default runtime (plus the runtime-wide fallback for floating
+        devices)."""
+        prev, self.transport = self.transport, transport
+        return prev
+
+    def pending(self, runtime: Optional["Runtime"] = None) -> int:
+        """Matched-but-unprogressed transfers ledgered on this device in
+        ``runtime`` (defaults to the device's own runtime, else the
+        global one)."""
+        rt = runtime if runtime is not None else self.runtime
+        if rt is None:
+            rt = _global_runtime()
+        return rt.pending_for(self)
 
     def mark_dead(self) -> None:
         """Declare this device failed.  Matched transfers touching a
@@ -657,6 +816,12 @@ class Device(HasAttrs):
         call (or immediately via ``runtime().drain_dead``) instead of
         hanging their completion objects forever."""
         self.alive = False
+
+    def __repr__(self) -> str:
+        name = self._attrs.get("name")
+        tag = f"{name!r}, " if name else ""
+        own = ", own" if self._attrs["own_resources"] else ""
+        return f"Device<{tag}axis={self.axis!r}{own}>@{id(self):x}"
 
     @property
     def axis(self) -> Optional[str]:
@@ -679,6 +844,51 @@ class Device(HasAttrs):
                 f"Device axis {axis!r} is not bound — post LCX ops under "
                 "shard_map over that axis, or pass mesh_shape attr"
             )
+
+
+# ---------------------------------------------------------------------------
+# Endpoint
+# ---------------------------------------------------------------------------
+class Endpoint(HasAttrs):
+    """The posting resource on a device (fourth hierarchy level).
+
+    LCI allocates one endpoint per thread (or per library) on a device;
+    here an endpoint is the handle ops are posted through:
+    ``send_x(buf).endpoint(ep)()`` resolves every unset resource from
+    the endpoint first — its matching engine, packet pool, and default
+    completion queue — before falling back to the device, net-context,
+    and runtime defaults (:func:`resolve_resources`).
+
+    By default an endpoint aliases its device's private resources; pass
+    ``matching_engine=`` / ``pool=`` / ``cq=`` for a fully isolated
+    endpoint (two endpoints with separate engines on one device never
+    match each other's traffic).
+    """
+
+    _ATTR_DEFAULTS = {"name": None}
+
+    def __init__(self, device: Device,
+                 matching_engine: Optional[MatchingEngine] = None,
+                 pool: Optional[PacketPool] = None,
+                 cq: Optional[CompletionQueue] = None,
+                 **attrs: Any) -> None:
+        self._init_attrs(attrs)
+        self.device = device
+        self.engine = matching_engine if matching_engine is not None \
+            else device.engine
+        self.pool = pool if pool is not None else device.pool
+        self.cq = cq if cq is not None else device.cq
+        self.stats = {"posted": 0}
+        device.endpoints.append(self)
+
+    @property
+    def runtime(self) -> Optional["Runtime"]:
+        return self.device.runtime
+
+    def __repr__(self) -> str:
+        name = self._attrs.get("name")
+        tag = f"{name!r} " if name else ""
+        return f"Endpoint<{tag}on {self.device!r}>"
 
 
 # ---------------------------------------------------------------------------
@@ -782,13 +992,17 @@ class FaultyTransport:
             return "corrupt"
         return "ok"
 
-    def apply(self, matches: List[Tuple[PostedOp, PostedOp]]
+    def apply(self, matches: List[Tuple[PostedOp, PostedOp]],
+              rt: Optional["Runtime"] = None
               ) -> List[Tuple[PostedOp, PostedOp]]:
         """Fault-filter matched pairs; returns the ones to execute now.
         Dropped pairs go to the retry queue (or fail fatally); delayed
         pairs go back to the ledger; duplicate/corrupt pairs pass
-        through with a ``fault_mark`` the execution path consumes."""
-        rt = runtime()
+        through with a ``fault_mark`` the execution path consumes.
+        ``rt`` is the runtime whose ledger/retry queue absorbs delayed
+        and dropped pairs (defaults to the global one)."""
+        if rt is None:
+            rt = runtime()
         out: List[Tuple[PostedOp, PostedOp]] = []
         for s, r in matches:
             self.stats["transfers"] += 1
@@ -824,35 +1038,58 @@ class FaultyTransport:
 # ---------------------------------------------------------------------------
 # Runtime (default resources + pending transfer ledger)
 # ---------------------------------------------------------------------------
+_RUNTIME_IDS = itertools.count(1)
+
+
 class Runtime:
-    """Holds default resources and the pending-transfer ledger.
+    """Top of the resource hierarchy: default resources, the
+    pending-transfer ledger, and the fault clocks.
 
     The paper: "There will be a default set of resources allocated by the
     runtime.  Users only need to explicitly manage resources when they
     find it necessary.  Users can also disable this default resource
     allocation."
+
+    A Runtime is independently constructible — ``Runtime()`` gives a
+    fully isolated instance whose traffic, ``pending()`` accounting,
+    fault injection, and :meth:`finalize` leak check never touch the
+    global default runtime (which is itself just a lazily created
+    ``Runtime`` — the ``g_runtime`` idiom).  Default resources are
+    allocated *through the hierarchy*: one :class:`NetContext`, holding
+    one default :class:`Device` with a private engine/pool/completion
+    queue and a default :class:`Endpoint`; ``default_engine`` etc. are
+    views onto that default device's resources.
     """
 
     def __init__(self, alloc_default_resources: bool = True,
-                 default_axis: Optional[str] = None) -> None:
+                 default_axis: Optional[str] = None,
+                 name: Optional[str] = None) -> None:
+        self.name = name or f"runtime-{next(_RUNTIME_IDS)}"
         self._seq = itertools.count()
         self._reg_ids = itertools.count(1)
+        self.net_contexts: List[NetContext] = []
+        self.default_net_context: Optional[NetContext] = None
         self.default_device: Optional[Device] = None
+        self.default_endpoint: Optional[Endpoint] = None
         self.default_pool: Optional[PacketPool] = None
         self.default_engine: Optional[MatchingEngine] = None
         self.default_cq: Optional[CompletionQueue] = None
         if alloc_default_resources:
-            self.default_device = Device(axis=default_axis)
-            self.default_pool = PacketPool()
-            self.default_engine = MatchingEngine()
-            self.default_cq = CompletionQueue()
+            nc = self.net_context()
+            dev = nc.device(axis=default_axis)
+            self.default_device = dev
+            self.default_endpoint = dev.default_endpoint
+            self.default_pool = dev.pool
+            self.default_engine = dev.engine
+            self.default_cq = dev.cq
         # (send, recv) matches waiting for a progress() call, ledgered
         # per device so take_ready(device) is an O(1) dict pop instead of
         # a quadratic filter over one global list.  A cross-device match
         # (shared engine, different devices) is indexed under BOTH
         # devices; entries are [match, taken] cells so whichever ledger
-        # is drained first claims the match.
-        self._ready: Dict[int, List[List[Any]]] = {}
+        # is drained first claims the match.  Keys are the Device objects
+        # themselves (identity-hashed) so leak reports can name them.
+        self._ready: Dict[Device, List[List[Any]]] = {}
         self._n_pending = 0
         # Fault path: progress-call tick counter, optional fault-injecting
         # transport, backoff retry queue (min-heap on release tick), and
@@ -869,6 +1106,29 @@ class Runtime:
         self._rcomp_registry: Dict[int, CompletionObject] = {}
         self._rcomp_next = itertools.count(1)
         self._lock = threading.Lock()
+
+    # -- hierarchy ----------------------------------------------------------
+    def _attach_net_context(self, nc: "NetContext") -> None:
+        self.net_contexts.append(nc)
+        if self.default_net_context is None:
+            self.default_net_context = nc
+
+    def net_context(self, backend: Optional[str] = None,
+                    **attrs: Any) -> "NetContext":
+        """Allocate a new :class:`NetContext` owned by this runtime."""
+        return NetContext(runtime=self, backend=backend, **attrs)
+
+    def device(self, axis: Optional[str] = None, **attrs: Any) -> "Device":
+        """Allocate an isolated device (private engine/pool/cq) on this
+        runtime's default net context, creating one if needed."""
+        nc = self.default_net_context
+        if nc is None:
+            nc = self.net_context()
+        return nc.device(axis=axis, **attrs)
+
+    def devices(self) -> List["Device"]:
+        """Every device attached to this runtime, across net contexts."""
+        return [d for nc in self.net_contexts for d in nc.devices]
 
     # -- sequencing ---------------------------------------------------------
     def next_seq(self) -> int:
@@ -894,10 +1154,10 @@ class Runtime:
             self, matches: List[Tuple[PostedOp, PostedOp]]) -> None:
         for m in matches:
             entry = [m, False]
-            d0 = id(m[0].device)
+            d0 = m[0].device
             self._ready.setdefault(d0, []).append(entry)
-            d1 = id(m[1].device)
-            if d1 != d0:
+            d1 = m[1].device
+            if d1 is not d0:
                 self._ready.setdefault(d1, []).append(entry)
             self._n_pending += 1
 
@@ -912,7 +1172,7 @@ class Runtime:
                         out.append(entry[0])
             self._ready.clear()
         else:
-            for entry in self._ready.pop(id(device), ()):
+            for entry in self._ready.pop(device, ()):
                 if not entry[1]:
                     entry[1] = True
                     out.append(entry[0])
@@ -924,6 +1184,44 @@ class Runtime:
         # ledger when due, so they count toward backpressure and the
         # finalize() leak check
         return self._n_pending + len(self._retry_q)
+
+    def pending_for(self, device: Device) -> int:
+        """Matched-but-unprogressed transfers touching ``device``
+        (ledger entries plus backoff-queued retries)."""
+        n = sum(1 for entry in self._ready.get(device, ()) if not entry[1])
+        n += sum(1 for _, _, (s, r) in self._retry_q
+                 if s.device is device or r.device is device)
+        return n
+
+    def pending_by_device(self) -> Dict[Device, int]:
+        """Per-device pending breakdown.  A cross-device match counts
+        under both of its devices, so the sum may exceed
+        :meth:`pending_count`."""
+        out: Dict[Device, int] = {}
+        for dev, ledger in self._ready.items():
+            n = sum(1 for entry in ledger if not entry[1])
+            if n:
+                out[dev] = n
+        for _, _, (s, r) in self._retry_q:
+            for dev in {id(s.device): s.device, id(r.device): r.device}.values():
+                out[dev] = out.get(dev, 0) + 1
+        return out
+
+    def finalize(self, strict: bool = True) -> None:
+        """Leak-check this runtime.  With ``strict`` raises if any
+        matched transfer was never progressed, naming the devices the
+        leaks sit on."""
+        n = self.pending_count()
+        if strict and n:
+            per_dev = ", ".join(
+                f"{dev!r}: {cnt}"
+                for dev, cnt in self.pending_by_device().items())
+            raise RuntimeError(
+                f"lcx.finalize(): {n} matched transfers never progressed "
+                f"on {self.name} ({per_dev})")
+        self._ready.clear()
+        self._retry_q = []
+        self._n_pending = 0
 
     # -- fault path: retries, deadlines, dead devices -------------------------
     def schedule_retry(self, s: PostedOp, r: PostedOp) -> bool:
@@ -1015,39 +1313,139 @@ class Runtime:
         return any(op.state == "pending" for op in self._timed)
 
 
+# ---------------------------------------------------------------------------
+# Global default runtime (the paper's ``g_runtime`` idiom)
+# ---------------------------------------------------------------------------
 _RUNTIME: Optional[Runtime] = None
 
 
 def init(alloc_default_resources: bool = True,
          default_axis: Optional[str] = None) -> Runtime:
-    """Initialize the LCX runtime (idempotent re-init replaces it)."""
+    """Initialize the global default LCX runtime (idempotent re-init
+    replaces it).  Explicit ``init()`` works even under
+    ``LCX_NO_GLOBAL_RUNTIME=1`` — the flag only disables *lazy*
+    auto-creation via :func:`runtime`."""
     global _RUNTIME
     _RUNTIME = Runtime(alloc_default_resources=alloc_default_resources,
-                       default_axis=default_axis)
+                       default_axis=default_axis, name="g_runtime")
     return _RUNTIME
 
 
-def finalize(strict: bool = True) -> None:
+def finalize(strict: bool = True, runtime: Optional[Runtime] = None) -> None:
+    """Tear down a runtime with a leak check.  Without ``runtime``,
+    finalizes and clears the global default instance; with one, finalizes
+    that runtime only (the global, if any, is untouched)."""
     global _RUNTIME
-    if _RUNTIME is not None and strict and _RUNTIME.pending_count():
-        raise RuntimeError(
-            f"lcx.finalize(): {_RUNTIME.pending_count()} matched transfers "
-            "never progressed")
-    _RUNTIME = None
+    if runtime is not None:
+        runtime.finalize(strict=strict)
+        if runtime is _RUNTIME:
+            _RUNTIME = None
+        return
+    if _RUNTIME is not None:
+        rt, _RUNTIME = _RUNTIME, None
+        rt.finalize(strict=strict)
 
 
 def runtime() -> Runtime:
+    """The global default runtime, lazily created on first use.  Set
+    ``LCX_NO_GLOBAL_RUNTIME=1`` to disable lazy creation and require
+    explicit :func:`init` / injected ``Runtime`` objects everywhere."""
     global _RUNTIME
     if _RUNTIME is None:
-        _RUNTIME = Runtime()
+        if os.environ.get("LCX_NO_GLOBAL_RUNTIME", "") not in ("", "0"):
+            raise RuntimeError(
+                "LCX_NO_GLOBAL_RUNTIME is set: the global default runtime "
+                "is disabled. Call lcx.init() explicitly or pass a Runtime "
+                "via .runtime(rt)/.endpoint(ep).")
+        _RUNTIME = Runtime(name="g_runtime")
     return _RUNTIME
 
 
+# Internal alias: lets code with a ``runtime=None`` *parameter* still
+# reach the module-level accessor without shadowing.
+_global_runtime = runtime
+
+
 def install_transport(
-        transport: Optional[FaultyTransport]) -> Optional[FaultyTransport]:
-    """Install (or, with ``None``, remove) the runtime's fault-injecting
-    transport; every subsequent ``progress()`` routes matched transfers
-    through it.  Returns the previous transport."""
-    rt = runtime()
+        transport: Optional[FaultyTransport],
+        runtime: Optional[Runtime] = None) -> Optional[FaultyTransport]:
+    """Install (or, with ``None``, remove) a fault-injecting transport on
+    a runtime: sets the runtime-wide fallback AND delegates to every
+    device currently attached (per-device installs override the
+    fallback; use :meth:`Device.install_transport` directly for
+    single-device chaos).  Defaults to the global runtime.  Returns the
+    previous runtime-wide transport."""
+    rt = runtime if runtime is not None else _global_runtime()
     prev, rt.transport = rt.transport, transport
+    for dev in rt.devices():
+        dev.install_transport(transport)
     return prev
+
+
+# ---------------------------------------------------------------------------
+# Resource resolution (endpoint → device → net context → runtime defaults)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ResolvedResources:
+    """The concrete resource set a posting op runs against, resolved by
+    :func:`resolve_resources` from whatever handles the caller supplied."""
+    runtime: Runtime
+    device: Optional[Device]
+    endpoint: Optional[Endpoint]
+    engine: Optional[MatchingEngine]
+    pool: Optional[PacketPool]
+    cq: Optional[CompletionQueue]
+
+
+def resolve_resources(runtime: Optional[Runtime] = None,
+                      endpoint: Optional[Endpoint] = None,
+                      device: Optional[Device] = None,
+                      engine: Optional[MatchingEngine] = None,
+                      pool: Optional[PacketPool] = None,
+                      ) -> ResolvedResources:
+    """Single resolution path for every posting op (paper §2.2: "an
+    operation resolves its resources most-specific-first").
+
+    Precedence, per resource: explicit argument > endpoint > device >
+    runtime defaults.  The owning runtime is found by walking up the
+    hierarchy (endpoint → device → net context → runtime); a *floating*
+    device (bare ``Device(...)``, no hierarchy parent) resolves engine/
+    pool from the ambient runtime's defaults — the legacy shared-pool
+    behaviour that lets two bare devices on one axis still match.
+    """
+    if endpoint is not None and device is not None \
+            and endpoint.device is not device:
+        raise ValueError(
+            f"endpoint {endpoint!r} belongs to {endpoint.device!r}, "
+            f"not the explicitly passed {device!r}")
+    if endpoint is not None and device is None:
+        device = endpoint.device
+    rt = runtime
+    if rt is None and device is not None:
+        rt = device.runtime          # None when the device floats
+    if rt is None:
+        rt = _global_runtime()
+    if device is None:
+        device = rt.default_device
+    ep = endpoint
+    if ep is None and device is not None:
+        ep = device.default_endpoint  # None for floating devices
+    if engine is None:
+        engine = ep.engine if ep is not None else None
+    if engine is None and device is not None:
+        engine = device.engine
+    if engine is None:
+        engine = rt.default_engine
+    if pool is None:
+        pool = ep.pool if ep is not None else None
+    if pool is None and device is not None:
+        pool = device.pool
+    if pool is None:
+        pool = rt.default_pool
+    cq = ep.cq if ep is not None else None
+    if cq is None and device is not None:
+        cq = device.cq
+    if cq is None:
+        cq = rt.default_cq
+    return ResolvedResources(runtime=rt, device=device, endpoint=ep,
+                             engine=engine, pool=pool, cq=cq)

@@ -205,7 +205,10 @@ def _moe_ep_shard(cfg: Any, p: PyTree, x_flat: jax.Array, ep_axis: str,
     C = capacity(cfg, x_flat.shape[0])
     buf, info = dispatch(x_flat, ids, w, E, C)             # [E, C, d]
 
-    dev = lcx.Device(axis=ep_axis)
+    # Private runtime + isolated device per a2a region: the MoE layer's
+    # traffic never touches (or requires) the global default runtime.
+    rt = lcx.Runtime(name="moe-ep")
+    dev = rt.device(axis=ep_axis)
     a2a = lcx.all_to_all_x(buf.reshape(E * C, d)).device(dev) \
         .backend(a2a_backend)()
     # rows grouped by source rank: [ep, E_loc, C, d] -> [E_loc, ep*C, d]

@@ -26,7 +26,9 @@ from repro.compat import axis_size
 
 def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
           stage_params: Any, microbatches: jax.Array, *,
-          axis: str = "pipe", use_lcx: bool = True) -> jax.Array:
+          axis: str = "pipe", use_lcx: bool = True,
+          runtime: Optional[Any] = None,
+          device: Optional[Any] = None) -> jax.Array:
     """GPipe forward.  ``microbatches`` [M, mb, ...] (same value on every
     rank; only rank 0 injects).  Returns [M, mb, ...] outputs, valid on
     the *last* rank and broadcast to all ranks at the end.
@@ -42,12 +44,13 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
         return _gpipe_native(stage_fn, stage_params, microbatches,
                              axis=axis)
     return _gpipe_taskgraph(stage_fn, stage_params, microbatches,
-                            axis=axis)
+                            axis=axis, runtime=runtime, device=device)
 
 
 def _gpipe_taskgraph(stage_fn: Callable[[Any, jax.Array], jax.Array],
                      stage_params: Any, microbatches: jax.Array, *,
-                     axis: str) -> jax.Array:
+                     axis: str, runtime: Optional[Any] = None,
+                     device: Optional[Any] = None) -> jax.Array:
     import repro.core as lcx
     from repro.amt import Executor
 
@@ -56,8 +59,15 @@ def _gpipe_taskgraph(stage_fn: Callable[[Any, jax.Array], jax.Array],
     M = microbatches.shape[0]
     mb_shape = microbatches.shape[1:]
 
-    dev = lcx.Device(axis=axis)
-    ex = Executor(device=dev, name="gpipe")
+    # Library-interop pattern: the pipeline owns a private runtime and an
+    # isolated device on the pipe axis unless the caller injects theirs —
+    # inter-stage traffic never routes through the global default runtime.
+    if runtime is None:
+        runtime = device.runtime if device is not None else None
+    if runtime is None:
+        runtime = lcx.Runtime(name="gpipe")
+    dev = device if device is not None else runtime.device(axis=axis)
+    ex = Executor(device=dev, runtime=runtime, name="gpipe")
     # Mutable per-rank cells the tick tasks thread state through: the
     # activation arriving from the predecessor stage, and the output
     # accumulator (valid rows written by the last stage only).

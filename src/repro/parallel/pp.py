@@ -63,8 +63,7 @@ def pp_apply_model(cfg: Any, params: PyTree, tokens: jax.Array, *,
         return out
 
     def region(stack, micro_):
-        import repro.core as lcx
-        lcx.init()
+        # gpipe owns a private LCX runtime; no global init needed.
         return gpipe(stage_fn, stack, micro_, axis="pipe")
 
     from repro.compat import shard_map

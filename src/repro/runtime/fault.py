@@ -41,10 +41,12 @@ class FailureInjector:
 
     def __init__(self, fail_at: Sequence[int] = (),
                  lost_devices: int = 0,
-                 devices: Sequence[Any] = ()) -> None:
+                 devices: Sequence[Any] = (),
+                 runtime: Optional[Any] = None) -> None:
         self.fail_at = set(fail_at)
         self.lost_devices = lost_devices
         self.devices = list(devices)
+        self.runtime = runtime
         self.fired: List[int] = []
 
     def check(self, step: int) -> None:
@@ -52,21 +54,30 @@ class FailureInjector:
             self.fail_at.discard(step)
             self.fired.append(step)
             for dev in self.devices:
-                fail_device(dev)
+                fail_device(dev, runtime=self.runtime)
             raise NodeFailure(f"injected node failure at step {step}",
                               self.lost_devices)
 
 
-def fail_device(device: Any) -> int:
+def fail_device(device: Any, runtime: Optional[Any] = None) -> int:
     """Mark an LCX device dead and drain its pending ledger as ``fatal``
     completions.  Returns the number of transfers drained.  This is the
     bridge from :class:`NodeFailure` to the comm layer: completion
     objects waiting on the dead device observe ``ErrorCode.FATAL``
     events (no infinite hang) and the caller can proceed to
-    :func:`elastic_reshard`."""
-    from repro.core import runtime  # local import: core must stay optional
+    :func:`elastic_reshard`.
+
+    The ledger drained is, in order: the explicitly passed ``runtime``,
+    the device's own runtime (hierarchy-created devices), else the
+    global default."""
     device.mark_dead()
-    return runtime().drain_dead(device)
+    rt = runtime
+    if rt is None:
+        rt = getattr(device, "runtime", None)
+    if rt is None:
+        from repro.core import runtime as _global  # core stays optional
+        rt = _global()
+    return rt.drain_dead(device)
 
 
 class StragglerMonitor:

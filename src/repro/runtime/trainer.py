@@ -126,12 +126,17 @@ class Trainer:
     def __init__(self, cfg: Any, tcfg: TrainConfig,
                  mesh: Optional[Mesh] = None,
                  kernels: Optional[Dict[str, Any]] = None,
-                 failure_injector: Optional[FailureInjector] = None):
+                 failure_injector: Optional[FailureInjector] = None,
+                 lcx_runtime: Optional[Any] = None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.mesh = mesh
         self.kernels = kernels
         self.injector = failure_injector
+        self.lcx_runtime = lcx_runtime
+        if (self.injector is not None and lcx_runtime is not None
+                and self.injector.runtime is None):
+            self.injector.runtime = lcx_runtime
         self.monitor = StragglerMonitor(tcfg.straggler_threshold,
                                         tcfg.straggler_patience)
         self.ckpt = (AsyncCheckpointer(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)

@@ -103,15 +103,29 @@ def make_decode_fn(cfg: Any, kernels: Optional[Dict[str, Any]] = None):
 class ServingEngine:
     def __init__(self, cfg: Any, params: PyTree, scfg: ServeConfig,
                  kernels: Optional[Dict[str, Any]] = None, *,
-                 use_executor: bool = True) -> None:
+                 use_executor: bool = True,
+                 lcx_runtime: Optional[Any] = None,
+                 lcx_device: Optional[Any] = None) -> None:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.kernels = kernels
         if use_executor:
+            import repro.core as lcx
             from repro.amt import Executor
-            self._executor: Optional[Executor] = Executor(name="serving")
+            # Library-interop pattern (docs/resources.md): the engine owns
+            # a private LCX runtime unless the application injects one, so
+            # its admission traffic never mixes with — or depends on — the
+            # process-global default runtime.
+            if lcx_runtime is None and lcx_device is not None:
+                lcx_runtime = lcx_device.runtime
+            if lcx_runtime is None:
+                lcx_runtime = lcx.Runtime(name="serving")
+            self.lcx_runtime: Optional[Any] = lcx_runtime
+            self._executor: Optional[Executor] = Executor(
+                name="serving", runtime=lcx_runtime, device=lcx_device)
         else:
+            self.lcx_runtime = lcx_runtime
             self._executor = None
         self.caches = init_cache(cfg, scfg.n_slots, scfg.max_seq)
         self.lengths = np.zeros((scfg.n_slots,), np.int32)

@@ -1,0 +1,382 @@
+"""Resource hierarchy (Runtime → NetContext → Device → Endpoint) tests.
+
+The paper's feature (b): fine-grained resource mapping for library
+interoperation, per-thread isolation, and flexibility.  Two runtimes —
+or two isolated devices on one runtime — must coexist in one process
+with zero cross-talk in matching, ``pending()`` accounting, fault
+injection, and ``finalize()`` leak checks.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as lcx
+
+
+@pytest.fixture(autouse=True)
+def fresh_runtime():
+    lcx.init()
+    yield
+    lcx.finalize(strict=False)
+
+
+def _roundtrip(tag, runtime=None, device=None, endpoint=None):
+    """Post a tagged loopback send/recv pair on explicit resources and
+    progress it; returns the received payload."""
+    sync = lcx.Synchronizer(threshold=1)
+    lcx.send_x(jnp.full((4,), float(tag))).tag(tag).runtime(runtime) \
+        .device(device).endpoint(endpoint)()
+    lcx.recv_x(jnp.zeros(4)).tag(tag).comp(sync).runtime(runtime) \
+        .device(device).endpoint(endpoint)()
+    lcx.progress_x().runtime(runtime).device(device).endpoint(endpoint)()
+    (ev,) = sync.wait()
+    return ev.payload
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+def test_hierarchy_construction():
+    rt = lcx.Runtime(name="mine")
+    assert rt.default_net_context in rt.net_contexts
+    nc = rt.default_net_context
+    dev = rt.default_device
+    assert dev in nc.devices and dev is nc.default_device
+    assert dev.net_context is nc and dev.runtime is rt
+    ep = rt.default_endpoint
+    assert ep is dev.default_endpoint and ep in dev.endpoints
+    assert ep.runtime is rt
+    # default resources ARE the default device's private resources
+    assert rt.default_engine is dev.engine
+    assert rt.default_pool is dev.pool
+    assert rt.default_cq is dev.cq
+
+
+def test_every_level_independently_constructible():
+    rt = lcx.Runtime(alloc_default_resources=False)
+    assert rt.default_device is None
+    nc = lcx.NetContext(runtime=rt, backend="sim")
+    dev = nc.device(name="worker-0")
+    ep = dev.endpoint()
+    assert dev.get_attr_backend() == "sim"
+    assert rt.devices() == [dev]
+    assert ep.engine is dev.engine
+    # endpoint with private resources never shares the device's
+    ep2 = dev.endpoint(matching_engine=lcx.MatchingEngine(),
+                       cq=lcx.CompletionQueue())
+    assert ep2.engine is not dev.engine and ep2.cq is not dev.cq
+
+
+def test_netcontext_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        lcx.NetContext(backend="infiniband")
+
+
+def test_floating_device_resolves_runtime_defaults():
+    # bare Device() = legacy behaviour: shares the global default engine,
+    # so two floating devices on one axis still match each other
+    d1, d2 = lcx.Device(), lcx.Device()
+    res1 = lcx.resolve_resources(device=d1)
+    res2 = lcx.resolve_resources(device=d2)
+    assert res1.engine is res2.engine is lcx.runtime().default_engine
+    assert res1.runtime is lcx.runtime()
+
+
+def test_resolution_order_endpoint_over_device_over_runtime():
+    rt = lcx.Runtime()
+    dev = rt.device()
+    ep_cq = lcx.CompletionQueue()
+    ep = dev.endpoint(cq=ep_cq)
+    res = lcx.resolve_resources(endpoint=ep)
+    assert res.runtime is rt
+    assert res.device is dev
+    assert res.cq is ep_cq              # endpoint wins
+    assert res.engine is dev.engine     # unset on endpoint -> device's
+    res_dev = lcx.resolve_resources(device=dev)
+    assert res_dev.cq is dev.cq         # no endpoint -> device's cq
+
+
+def test_resolution_rejects_mismatched_endpoint_device():
+    rt = lcx.Runtime()
+    d1, d2 = rt.device(), rt.device()
+    with pytest.raises(ValueError, match="belongs to"):
+        lcx.resolve_resources(endpoint=d1.default_endpoint, device=d2)
+
+
+# ---------------------------------------------------------------------------
+# Two runtimes: zero cross-talk
+# ---------------------------------------------------------------------------
+def test_two_runtimes_no_crosstalk_matching_or_pending():
+    rt_a = lcx.Runtime(name="libA")
+    rt_b = lcx.Runtime(name="libB")
+    # same tag on both runtimes: posts must match within their own
+    # runtime's engine, never across
+    sa, sb = lcx.Synchronizer(threshold=1), lcx.Synchronizer(threshold=1)
+    lcx.send_x(jnp.full((2,), 1.0)).tag(9).runtime(rt_a)()
+    lcx.send_x(jnp.full((2,), 2.0)).tag(9).runtime(rt_b)()
+    lcx.recv_x(jnp.zeros(2)).tag(9).comp(sa).runtime(rt_a)()
+    lcx.recv_x(jnp.zeros(2)).tag(9).comp(sb).runtime(rt_b)()
+    assert rt_a.pending_count() == 1
+    assert rt_b.pending_count() == 1
+    assert lcx.runtime().pending_count() == 0
+    # progress one runtime: only its transfer lands
+    lcx.progress_x().runtime(rt_a)()
+    assert sa.ready() and not sb.ready()
+    assert rt_a.pending_count() == 0 and rt_b.pending_count() == 1
+    lcx.progress_x().runtime(rt_b)()
+    (ev_a,), (ev_b,) = sa.wait(), sb.wait()
+    np.testing.assert_allclose(ev_a.payload, 1.0)
+    np.testing.assert_allclose(ev_b.payload, 2.0)
+
+
+def test_two_runtimes_concurrent_interleaved_exchange():
+    rt_a, rt_b = lcx.Runtime(), lcx.Runtime()
+    # interleave posts across runtimes before any progress
+    for tag in range(4):
+        lcx.send_x(jnp.full((3,), float(tag))).tag(tag).runtime(rt_a)()
+        lcx.send_x(jnp.full((3,), float(tag + 100))).tag(tag).runtime(rt_b)()
+    cqa, cqb = lcx.CompletionQueue(), lcx.CompletionQueue()
+    for tag in range(4):
+        lcx.recv_x(jnp.zeros(3)).tag(tag).comp(cqa).runtime(rt_a)()
+        lcx.recv_x(jnp.zeros(3)).tag(tag).comp(cqb).runtime(rt_b)()
+    lcx.progress_x().runtime(rt_a)()
+    lcx.progress_x().runtime(rt_b)()
+    got_a = sorted(float(ev.payload[0]) for ev in cqa.pop_all())
+    got_b = sorted(float(ev.payload[0]) for ev in cqb.pop_all())
+    assert got_a == [0.0, 1.0, 2.0, 3.0]
+    assert got_b == [100.0, 101.0, 102.0, 103.0]
+
+
+def test_per_runtime_finalize_leak_check():
+    rt_a, rt_b = lcx.Runtime(name="leaky"), lcx.Runtime(name="clean")
+    lcx.send_x(jnp.zeros(2)).tag(1).runtime(rt_a)()
+    lcx.recv_x(jnp.zeros(2)).tag(1).runtime(rt_a)()
+    # clean runtime finalizes fine even while the leaky one has traffic
+    lcx.finalize(strict=True, runtime=rt_b)
+    with pytest.raises(RuntimeError, match="leaky"):
+        lcx.finalize(strict=True, runtime=rt_a)
+
+
+def test_finalize_error_names_devices():
+    rt = lcx.Runtime(name="rt-x")
+    d1 = rt.device(name="busy")
+    lcx.send_x(jnp.zeros(2)).tag(1).device(d1)()
+    lcx.recv_x(jnp.zeros(2)).tag(1).device(d1)()
+    with pytest.raises(RuntimeError) as ei:
+        rt.finalize(strict=True)
+    assert "busy" in str(ei.value)
+    assert "rt-x" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Two isolated devices on ONE runtime
+# ---------------------------------------------------------------------------
+def test_two_isolated_devices_one_runtime_no_matching_crosstalk():
+    rt = lcx.Runtime()
+    d1, d2 = rt.device(name="t0"), rt.device(name="t1")
+    assert d1.engine is not d2.engine
+    s1 = lcx.Synchronizer(threshold=1)
+    s2 = lcx.Synchronizer(threshold=1)
+    # identical tags; the d1 recv must take d1's send, not d2's
+    lcx.send_x(jnp.full((2,), 1.0)).tag(5).device(d1)()
+    lcx.send_x(jnp.full((2,), 2.0)).tag(5).device(d2)()
+    lcx.recv_x(jnp.zeros(2)).tag(5).comp(s1).device(d1)()
+    lcx.recv_x(jnp.zeros(2)).tag(5).comp(s2).device(d2)()
+    assert rt.pending_for(d1) == 1 and rt.pending_for(d2) == 1
+    lcx.progress_x().device(d1)()
+    assert s1.ready() and not s2.ready()
+    assert rt.pending_for(d1) == 0 and rt.pending_for(d2) == 1
+    lcx.progress_x().device(d2)()
+    np.testing.assert_allclose(s1.wait()[0].payload, 1.0)
+    np.testing.assert_allclose(s2.wait()[0].payload, 2.0)
+
+
+def test_pending_by_device_breakdown():
+    rt = lcx.Runtime()
+    d1, d2 = rt.device(name="a"), rt.device(name="b")
+    for _ in range(3):
+        lcx.send_x(jnp.zeros(1)).device(d1)()
+        lcx.recv_x(jnp.zeros(1)).device(d1)()
+    lcx.send_x(jnp.zeros(1)).device(d2)()
+    lcx.recv_x(jnp.zeros(1)).device(d2)()
+    by_dev = rt.pending_by_device()
+    assert by_dev[d1] == 3 and by_dev[d2] == 1
+    assert d1.pending() == 3 and d2.pending() == 1
+    assert rt.default_net_context.pending() == 4
+
+
+def test_fault_injection_isolated_per_device():
+    rt = lcx.Runtime()
+    d_chaos = rt.device(name="chaos")
+    d_clean = rt.device(name="clean")
+    # 100% drop on the chaos device only
+    d_chaos.install_transport(
+        lcx.FaultyTransport(lcx.FaultPolicy(seed=1, drop=1.0)))
+    s_chaos = lcx.Synchronizer(threshold=1)
+    s_clean = lcx.Synchronizer(threshold=1)
+    lcx.send_x(jnp.ones(2)).tag(1).device(d_chaos)()
+    lcx.recv_x(jnp.zeros(2)).tag(1).comp(s_chaos).device(d_chaos)()
+    lcx.send_x(jnp.ones(2)).tag(1).device(d_clean)()
+    lcx.recv_x(jnp.zeros(2)).tag(1).comp(s_clean).device(d_clean)()
+    lcx.progress_x().device(d_chaos)()
+    lcx.progress_x().device(d_clean)()
+    # chaos transfer dropped fatally (no retry budget); clean one landed
+    (ev,) = s_chaos.wait(raise_on_error=False)
+    assert ev.status is lcx.ErrorCode.FATAL
+    (ev,) = s_clean.wait()
+    assert ev.status.ok
+    assert d_chaos.transport.stats["drops"] == 1
+
+
+def test_fault_injection_isolated_per_runtime():
+    rt_chaos, rt_clean = lcx.Runtime(), lcx.Runtime()
+    lcx.install_transport(
+        lcx.FaultyTransport(lcx.FaultPolicy(seed=2, drop=1.0)),
+        runtime=rt_chaos)
+    assert _roundtrip(3, runtime=rt_clean)[0] == 3.0   # unaffected
+    s = lcx.Synchronizer(threshold=1)
+    lcx.send_x(jnp.ones(2)).tag(4).runtime(rt_chaos)()
+    lcx.recv_x(jnp.zeros(2)).tag(4).comp(s).runtime(rt_chaos)()
+    lcx.progress_x().runtime(rt_chaos)()
+    (ev,) = s.wait(raise_on_error=False)
+    assert ev.status is lcx.ErrorCode.FATAL
+
+
+def test_dead_device_drains_own_runtime_only():
+    from repro.runtime.fault import fail_device
+    rt = lcx.Runtime()
+    dev = rt.device()
+    lcx.send_x(jnp.zeros(2)).device(dev)()
+    lcx.recv_x(jnp.zeros(2)).device(dev)()
+    # global runtime untouched by this device's death
+    _roundtrip(1)                       # traffic on the global default
+    assert fail_device(dev) == 1        # drains rt's ledger via dev.runtime
+    assert rt.pending_count() == 0
+    assert lcx.runtime().pending_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# install_transport delegation (global -> per-device)
+# ---------------------------------------------------------------------------
+def test_global_install_transport_delegates_to_devices():
+    rt = lcx.runtime()
+    dev = rt.device(name="extra")
+    t = lcx.FaultyTransport(lcx.FaultPolicy(seed=0, drop=0.0))
+    prev = lcx.install_transport(t)
+    assert prev is None
+    assert rt.transport is t
+    assert rt.default_device.transport is t
+    assert dev.transport is t
+    # removal clears every device too
+    assert lcx.install_transport(None) is t
+    assert rt.default_device.transport is None and dev.transport is None
+
+
+# ---------------------------------------------------------------------------
+# FlexOp reuse across endpoints; plain() defaults
+# ---------------------------------------------------------------------------
+def test_flexop_clone_reuse_across_two_endpoints():
+    rt = lcx.Runtime()
+    ep1 = rt.device(name="e1").endpoint()
+    ep2 = rt.device(name="e2").endpoint()
+    proto = lcx.send_x(jnp.full((2,), 7.0)).tag(11)
+    # one prototype op cloned onto two endpoints: each clone posts into
+    # its own endpoint's engine
+    proto.clone().endpoint(ep1)()
+    proto.clone().endpoint(ep2)()
+    assert ep1.stats["posted"] == 1 and ep2.stats["posted"] == 1
+    s1, s2 = lcx.Synchronizer(threshold=1), lcx.Synchronizer(threshold=1)
+    lcx.recv_x(jnp.zeros(2)).tag(11).comp(s1).endpoint(ep1)()
+    lcx.recv_x(jnp.zeros(2)).tag(11).comp(s2).endpoint(ep2)()
+    lcx.progress_x().runtime(rt)()
+    np.testing.assert_allclose(s1.wait()[0].payload, 7.0)
+    np.testing.assert_allclose(s2.wait()[0].payload, 7.0)
+    # the prototype itself is untouched (no endpoint bound)
+    assert proto.arg_or("endpoint", None) is None
+
+
+def test_plain_shorthand_resolves_defaults():
+    # plain() ops with no resource args use the global default runtime
+    h_send = lcx.send(jnp.full((3,), 5.0), tag=2)
+    h_recv = lcx.recv(jnp.zeros(3), tag=2)
+    assert lcx.runtime().pending_count() == 1
+    lcx.progress()
+    np.testing.assert_allclose(h_recv.payload(), 5.0)
+    assert h_send.status == "done"
+    # posted on the runtime's default device
+    assert h_send.posted.device is lcx.runtime().default_device
+
+
+def test_plain_shorthand_accepts_explicit_runtime():
+    rt = lcx.Runtime()
+    lcx.send(jnp.full((2,), 9.0), tag=3, runtime=rt)
+    h = lcx.recv(jnp.zeros(2), tag=3, runtime=rt)
+    assert rt.pending_count() == 1 and lcx.runtime().pending_count() == 0
+    lcx.progress(runtime=rt)
+    np.testing.assert_allclose(h.payload(), 9.0)
+
+
+# ---------------------------------------------------------------------------
+# AMT executors on isolated runtimes
+# ---------------------------------------------------------------------------
+def test_executors_on_separate_runtimes_are_isolated():
+    from repro.amt import Executor
+    rt_a, rt_b = lcx.Runtime(name="exA"), lcx.Runtime(name="exB")
+    ex_a = Executor(runtime=rt_a, name="exA")
+    ex_b = Executor(runtime=rt_b, name="exB")
+    got = {}
+
+    def talker(key):
+        def t(ctx):
+            ctx.put(jnp.full((2,), float(len(key))))
+            return ctx.suspend(lambda ev: got.__setitem__(key, ev.payload))
+        return t
+
+    ex_a.spawn(talker("a"))
+    ex_b.spawn(talker("b"))
+    ex_a.run()
+    assert "a" in got and "b" not in got   # ex_b untouched by ex_a.run()
+    ex_b.run()
+    assert "b" in got
+    assert ex_a.runtime is rt_a and ex_b.runtime is rt_b
+
+
+# ---------------------------------------------------------------------------
+# LCX_NO_GLOBAL_RUNTIME
+# ---------------------------------------------------------------------------
+def test_no_global_runtime_env_blocks_lazy_creation():
+    code = textwrap.dedent("""
+        import os
+        os.environ["LCX_NO_GLOBAL_RUNTIME"] = "1"
+        import repro.core as lcx
+        try:
+            lcx.runtime()
+        except RuntimeError as e:
+            assert "LCX_NO_GLOBAL_RUNTIME" in str(e)
+        else:
+            raise SystemExit("lazy runtime() should have raised")
+        # explicit construction still works
+        rt = lcx.Runtime()
+        import jax.numpy as jnp
+        lcx.send(jnp.ones(2), tag=1, runtime=rt)
+        h = lcx.recv(jnp.zeros(2), tag=1, runtime=rt)
+        lcx.progress(runtime=rt)
+        assert float(h.payload().sum()) == 2.0
+        # explicit init() installs the global despite the flag
+        lcx.init()
+        lcx.runtime()
+        print("ok")
+    """)
+    env = dict(os.environ)
+    env.pop("LCX_NO_GLOBAL_RUNTIME", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(__file__)),
+                         )
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nERR:{out.stderr}"
+    assert "ok" in out.stdout
