@@ -97,6 +97,8 @@ def main(argv: List[str] = None) -> List[Dict[str, float]]:
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--n", type=int, default=None,
                     help="override tasks per cell")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write the JSON rows here")
     args = ap.parse_args(argv)
 
     n = args.n if args.n is not None else (16 if args.smoke else 64)
@@ -118,6 +120,10 @@ def main(argv: List[str] = None) -> List[Dict[str, float]]:
           f"{r['seconds'] * 1e3:8.2f} "
           f"-> {r['status']} after {r['ticks_to_surface']} ticks")
     print("all cells converged")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.out}")
     print("CHAOSBENCH_JSON=" + json.dumps(rows))
     return rows
 

@@ -1,0 +1,158 @@
+"""Failover benchmark: recovery latency and goodput under a
+kill-every-N-steps chaos soak.
+
+Drives rounds of completion-tracked ``put``s over a lossy transport
+(seeded drop) with a :class:`HeartbeatMonitor` attached.  Every
+``--kill-every`` rounds the current primary device is frozen *mid-round*
+(in-flight transfers stall); the monitor declares it dead from missing
+beats and ``runtime.failover`` migrates the stalled ledger, retry queue,
+and un-matched ops onto the least-loaded survivor.  The soak asserts
+exactly-once delivery for every round — raced transfers are neither lost
+nor double-delivered (per-op sequence numbers + the dedup window).
+
+Reported per kill: detection latency (ticks from freeze to the heartbeat
+declaration), drain latency (ticks from freeze until every in-flight
+transfer completed on the survivor), and migrated-op counts.  Aggregate:
+goodput (deliveries/s and deliveries/progress-call) and the runtime's
+``failover_stats``.  ``--kills N`` sets the kill count (the soak
+provisions N standby devices); ``--smoke`` shrinks the soak for CI;
+``--out FILE`` writes the JSON rows (wired to ``BENCH_failover.json``
+by ``benchmarks/run.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+import repro.core as lcx
+from repro.runtime.fault import HeartbeatMonitor
+
+
+def run_soak(kills: int, kill_every: int, n_tasks: int, seed: int,
+             drop: float = 0.1, max_retries: int = 64) -> Dict[str, object]:
+    """Kill-every-N-rounds soak.  Returns aggregate + per-kill rows."""
+    lcx.init()
+    rt = lcx.runtime()
+    lcx.install_transport(lcx.FaultyTransport(seed=seed, drop=drop))
+    hb = HeartbeatMonitor(threshold=2.0, patience=2, grace=3,
+                          on_dead="failover").attach(rt)
+    # one primary + one standby per kill (failover targets the
+    # least-loaded survivor, so each kill consumes one standby)
+    standbys = [rt.device() for _ in range(kills + 1)]
+    primary = standbys.pop(0)
+    cq = lcx.CompletionQueue()
+
+    # beat history so the monitor has an EMA before the first kill
+    for _ in range(4):
+        lcx.progress()
+
+    rounds = kills * kill_every
+    per_kill: List[Dict[str, float]] = []
+    delivered_total = 0
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        kill_round = (r + 1) % kill_every == 0 and len(per_kill) < kills
+        for i in range(n_tasks):
+            lcx.put_x(jnp.float32(r * n_tasks + i)).remote_comp(cq) \
+                .device(primary).tag(i).max_retries(max_retries)()
+        freeze_tick = None
+        detect_tick = None
+        if kill_round:
+            # freeze before the first progress call of the round: every
+            # transfer of this round is in flight when the device dies
+            freeze_tick = rt.tick
+            primary.freeze()
+            n_events_before = len(hb.events)
+        for _ in range(600):
+            lcx.progress()
+            if kill_round and detect_tick is None \
+                    and len(hb.events) > n_events_before:
+                detect_tick = rt.tick
+            if len(cq) >= n_tasks and not rt.has_inflight():
+                break
+        evs = cq.pop_all()
+        payloads = sorted(float(ev.payload) for ev in evs)
+        expect = [float(r * n_tasks + i) for i in range(n_tasks)]
+        assert payloads == expect, \
+            f"round {r}: exactly-once violated ({len(evs)} events)"
+        delivered_total += len(evs)
+        if kill_round:
+            ev = hb.events[-1]
+            assert detect_tick is not None, "kill never detected"
+            per_kill.append({
+                "round": r,
+                "detect_ticks": detect_tick - freeze_tick,
+                "drain_ticks": rt.tick - freeze_tick,
+                "migrated_ops": (ev["report"].n_ledger
+                                 + ev["report"].n_retry
+                                 + ev["report"].n_engine_ops),
+            })
+            primary = ev["target"]
+    dt = time.perf_counter() - t0
+
+    stats = rt.failover_stats
+    assert stats["failovers"] == kills, stats
+    return {
+        "kills": kills, "rounds": rounds, "tasks_per_round": n_tasks,
+        "drop": drop, "seconds": dt,
+        "delivered": delivered_total,
+        "goodput_per_s": delivered_total / dt,
+        "deliveries_per_tick": delivered_total / max(rt.tick, 1),
+        "ticks": rt.tick,
+        "mean_detect_ticks": (sum(k["detect_ticks"] for k in per_kill)
+                              / max(len(per_kill), 1)),
+        "mean_drain_ticks": (sum(k["drain_ticks"] for k in per_kill)
+                             / max(len(per_kill), 1)),
+        "dedup_suppressed": stats["dedup_suppressed"],
+        "migrated_ops": stats["migrated_ops"],
+        "per_kill": per_kill,
+    }
+
+
+def main(argv: List[str] = None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kills", type=int, default=3,
+                    help="devices to kill over the soak")
+    ap.add_argument("--kill-every", type=int, default=2,
+                    help="rounds between kills")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small soak for CI")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--n", type=int, default=None,
+                    help="override transfers per round")
+    ap.add_argument("--drop", type=float, default=0.1,
+                    help="seeded transport drop rate")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    n = args.n if args.n is not None else (8 if args.smoke else 32)
+    row = run_soak(args.kills, args.kill_every, n, args.seed,
+                   drop=args.drop)
+
+    print(f"{'kill':>5s} {'detect':>7s} {'drain':>6s} {'migrated':>9s}")
+    for k in row["per_kill"]:
+        print(f"{k['round']:5d} {k['detect_ticks']:7d} "
+              f"{k['drain_ticks']:6d} {k['migrated_ops']:9d}")
+    print(f"{row['kills']} kills over {row['rounds']} rounds: "
+          f"recovery latency {row['mean_detect_ticks']:.1f} ticks detect "
+          f"/ {row['mean_drain_ticks']:.1f} ticks drain; "
+          f"goodput {row['goodput_per_s']:.0f} deliveries/s "
+          f"({row['deliveries_per_tick']:.2f}/tick), "
+          f"{row['dedup_suppressed']} duplicates suppressed")
+    print("all rounds delivered exactly once")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"wrote {args.out}")
+    print("FAILOVERBENCH_JSON=" + json.dumps(
+        {k: v for k, v in row.items() if k != "per_kill"}))
+    return row
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,11 @@ Sections:
 3. lcx_collectives   — LCX ring/pairwise vs native XLA collectives
 4. moe_dispatch      — EP a2a dispatch throughput (LCX a2a backends)
 5. kernels_bench     — Pallas kernels vs oracles
-6. chaosbench        — seeded fault-injection sweep (convergence)
-7. isolationbench    — per-device throughput isolation (resource
+6. chaosbench        — seeded fault-injection sweep (convergence),
+                       emits BENCH_chaos.json at repo root
+7. failoverbench     — kill-every-N chaos soak (recovery latency,
+                       goodput), emits BENCH_failover.json at repo root
+8. isolationbench    — per-device throughput isolation (resource
                        hierarchy), emits BENCH_isolation.json
 CSV outputs land in results/.
 """
@@ -18,7 +21,8 @@ import argparse
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
 
@@ -70,10 +74,22 @@ def main() -> None:
     print("5. chaos sweep (seeded fault injection must converge)")
     print("=" * 72)
     import chaosbench
-    chaosbench.main(["--smoke"] if args.fast else [])
+    cb_args = ["--out", os.path.join(ROOT, "BENCH_chaos.json")]
+    if args.fast:
+        cb_args.append("--smoke")
+    chaosbench.main(cb_args)
 
     print("=" * 72)
-    print("6. device isolation (busy neighbor must not steal throughput)")
+    print("6. failover soak (kill-every-N: recovery latency + goodput)")
+    print("=" * 72)
+    import failoverbench
+    fb_args = ["--out", os.path.join(ROOT, "BENCH_failover.json")]
+    if args.fast:
+        fb_args.append("--smoke")
+    failoverbench.main(fb_args)
+
+    print("=" * 72)
+    print("7. device isolation (busy neighbor must not steal throughput)")
     print("=" * 72)
     import isolationbench
     ib_args = ["--out", "results/BENCH_isolation.json"]

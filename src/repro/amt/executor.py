@@ -197,7 +197,7 @@ class Executor:
         self._runtime = runtime
         if device is None and runtime is not None:
             device = runtime.default_device
-        self.device = device if device is not None else lcx.Device()
+        self._device = device if device is not None else lcx.Device()
         self.pool = pool
         self.graph = graph or TaskGraph()
         self.cq = cq if cq is not None else lcx.CompletionQueue()
@@ -220,7 +220,7 @@ class Executor:
             "events_retired": 0, "backpressure_stalls": 0,
             "backpressure_deferrals": 0, "progress_backoffs": 0,
             "watch_fires": 0, "cycles": 0, "tasks_failed": 0,
-            "task_retries": 0,
+            "task_retries": 0, "tasks_redispatched": 0,
         }
         self._heap: List[Tuple[int, int, Task]] = []
         self._tie = itertools.count()
@@ -234,6 +234,17 @@ class Executor:
         """The runtime this executor posts/progresses against (injected,
         else the global default)."""
         return self._runtime if self._runtime is not None else lcx.runtime()
+
+    @property
+    def device(self) -> lcx.Device:
+        """The executor's posting device, following the failover
+        forwarding chain: after ``runtime.failover(dev)`` the executor
+        transparently posts on the survivor."""
+        dev = self._device
+        if dev.migrated_to is not None:
+            dev = dev.resolve_migrated()
+            self._device = dev
+        return dev
 
     # -- submission -----------------------------------------------------------
     def spawn(self, fn: Callable[..., Any], *,
@@ -286,11 +297,16 @@ class Executor:
             self._release_deferred()
             while self._heap:
                 deferred = False
-                while self.runtime.pending_count() >= self.max_inflight:
+                # Per-device backpressure: gate admission on the POSTING
+                # device's pending depth (its packet pool), not the
+                # runtime-wide ledger — a busy neighbour device must not
+                # stall this executor's admission (docs/resources.md).
+                while self.runtime.pending_for(self.device) \
+                        >= self.max_inflight:
                     self.stats["backpressure_stalls"] += 1
-                    pending_before = self.runtime.pending_count()
+                    pending_before = self.runtime.pending_for(self.device)
                     self._progress_and_retire()
-                    if self.runtime.pending_count() >= pending_before:
+                    if self.runtime.pending_for(self.device) >= pending_before:
                         # progress could not shrink the ledger — admitting
                         # more work would only deepen it; defer until the
                         # outer flush (or an external drain) frees packets
@@ -436,16 +452,32 @@ class Executor:
         n = len(events)
         self.stats["events_retired"] += n
         resumable: List[Task] = []
+        redispatch: List[Task] = []
         for ev in events:
             task = ev.context
             if not isinstance(task, Task):
                 continue  # foreign traffic on a shared queue
+            if ev.migrated and ev.status is lcx.ErrorCode.RETRY \
+                    and task.state is TaskState.BLOCKED:
+                # Device failover could not replay this op on the
+                # survivor (axis mismatch / replay disabled): re-dispatch
+                # the suspended task so it re-posts on the migrated
+                # device — a healthy task, not a dead-letter.
+                if task not in redispatch:
+                    redispatch.append(task)
+                continue
             susp = task._suspension
             if susp is None or len(susp["events"]) >= susp["need"]:
                 continue  # not suspended / already satisfied this batch
             susp["events"].append(ev)
             if len(susp["events"]) == susp["need"]:
                 resumable.append(task)
+        for task in redispatch:
+            task._suspension = None
+            task.state = TaskState.READY
+            self._push(task)
+            self.stats["tasks_redispatched"] += 1
+            self._activity += 1
         for task in resumable:
             susp = task._suspension
             task._suspension = None

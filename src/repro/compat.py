@@ -17,6 +17,14 @@ from jax import lax
 __all__ = ["AxisType", "abstract_mesh", "axis_size", "make_mesh",
            "shard_map"]
 
+# Partitionable threefry makes sharded RNG output independent of the
+# device layout, so sharded param init bit-matches single-device init.
+# Newer JAX defaults this on; the pinned release defaults it off, which
+# silently diverges multi-host init from the eager reference.
+if hasattr(jax.config, "jax_threefry_partitionable") \
+        and not jax.config.jax_threefry_partitionable:
+    jax.config.update("jax_threefry_partitionable", True)
+
 
 try:  # JAX >= 0.5
     from jax.sharding import AxisType

@@ -32,7 +32,8 @@ from .attr import (get_global_attr, reset_global_attrs, set_global_attr)
 from .resources import (CompletionError, CompletionObject, CompletionQueue,
                         CounterCompletion, Device, Endpoint, ErrorCode, Event,
                         FaultPolicy, FaultyTransport, FunctionHandler,
-                        MatchingEngine, MemoryRegion, NetContext, PacketPool,
+                        MatchingEngine, MemoryRegion, MigrationReport,
+                        NetContext, PacketPool,
                         Perm, PostedOp, ResolvedResources, Runtime,
                         Synchronizer, IMMEDIATE_RCOMP_BITS,
                         IMMEDIATE_TAG_BITS, MAX_RCOMP_BITS, MAX_TAG_BITS,
@@ -51,7 +52,7 @@ __all__ = [
     "CompletionError", "CompletionObject", "CompletionQueue",
     "CounterCompletion", "Device", "Endpoint", "ErrorCode", "Event",
     "FaultPolicy", "FaultyTransport", "FunctionHandler", "MatchingEngine",
-    "MemoryRegion", "NetContext", "PacketPool", "Perm", "PostedOp",
+    "MemoryRegion", "MigrationReport", "NetContext", "PacketPool", "Perm", "PostedOp",
     "ResolvedResources", "Runtime", "Synchronizer",
     "IMMEDIATE_RCOMP_BITS", "IMMEDIATE_TAG_BITS", "MAX_RCOMP_BITS",
     "MAX_TAG_BITS", "finalize", "init", "install_transport",

@@ -328,11 +328,22 @@ class progress_x(FlexOp):
         if dev_filter is None and ep is not None:
             dev_filter = ep.device
         rt = self.arg_or("runtime", None)
+        if dev_filter is not None and dev_filter.migrated_to is not None:
+            dev_filter = dev_filter.resolve_migrated()
         if rt is None and dev_filter is not None:
             rt = dev_filter.runtime
         if rt is None:
             rt = runtime()
         rt.tick += 1
+        if rt.heartbeat is not None:
+            # Heartbeats: every responsive device answers the progress
+            # ping; a frozen device stays silent and the monitor's EMA
+            # of inter-beat gaps eventually declares it dead (triggering
+            # the configured failover/drain/raise policy).
+            for d in rt.devices():
+                if d.alive and d.responsive:
+                    d.last_beat = rt.tick
+            rt.heartbeat.poll(rt)
         pool = self.arg_or("pool", None)
         if pool is None and ep is not None:
             pool = ep.pool
@@ -346,11 +357,19 @@ class progress_x(FlexOp):
         n = 0
         if matches:
             live = []
+            stalled = []
             for s, r in matches:
-                if s.device.alive and r.device.alive:
-                    live.append((s, r))
-                else:
+                if not (s.device.alive and r.device.alive):
                     signal_error(s, r, ErrorCode.FATAL)
+                elif not (s.device.responsive and r.device.responsive):
+                    # frozen (silently dead) device: its transfers stall
+                    # in the ledger until a heartbeat monitor declares it
+                    # dead and fails them over (or drains them fatal)
+                    stalled.append((s, r))
+                else:
+                    live.append((s, r))
+            if stalled:
+                rt.enqueue_matches(stalled)
             live.sort(key=lambda m: m[0].seq)
             if explicit_t is not None:
                 live = explicit_t.apply(live, rt)
@@ -562,18 +581,37 @@ def _signal(rt: Runtime, s: PostedOp, r: PostedOp, value: Any) -> None:
     re-post when the op has retry budget, else a ``retry``-status
     completion the poster can re-post on.  The transport's per-hop
     ``fault_mark`` (duplicate / corrupt) is consumed here.
+
+    Migrated (failed-over) transfers are exactly-once: each absorbed
+    delivery records the op's seq in the runtime's dedup window, and a
+    *migrated* replay whose seq already delivered is suppressed instead
+    of double-delivered.  Transport-injected duplicates are exempt (the
+    link duplicated the packet; both copies arrive, as on real wires).
     """
     mark, s.fault_mark = s.fault_mark, None
+    migrated = s.migrated or r.migrated
     r_status = ErrorCode.OK
     if mark in ("corrupt", "corrupt_silent"):
         value = _corrupt_value(value)
         if mark == "corrupt":
             r_status = ErrorCode.RETRY
+    if migrated and rt.was_delivered(s.seq):
+        # the transfer raced the failure: it was already delivered before
+        # the device died, and the failover replayed it — suppress.
+        rt.failover_stats["dedup_suppressed"] += 1
+        already_done = s.state == "done"
+        s.state = r.state = "done"
+        if s.comp is not None and not already_done:
+            s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
+                                perm=s.perm, remote=False, context=s.context,
+                                migrated=True))
+        return
     if r.comp is not None:
         remote = s.op_name in ("put", "am")
         ret = r.comp.signal(Event(payload=value, op=s.op_name, tag=r.tag,
                                   perm=r.perm, remote=remote,
-                                  context=r.context, status=r_status))
+                                  context=r.context, status=r_status,
+                                  migrated=migrated))
         if ret is ErrorCode.RETRY and r_status.ok:
             # completion-queue overflow: the delivery was not absorbed
             if rt.schedule_retry(s, r):
@@ -583,16 +621,22 @@ def _signal(rt: Runtime, s: PostedOp, r: PostedOp, value: Any) -> None:
                 s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
                                     perm=s.perm, remote=False,
                                     context=s.context,
-                                    status=ErrorCode.RETRY))
+                                    status=ErrorCode.RETRY,
+                                    migrated=migrated))
             return
+        rt.note_delivered(s.seq)
         if mark == "duplicate":
             r.comp.signal(Event(payload=value, op=s.op_name, tag=r.tag,
                                 perm=r.perm, remote=remote,
-                                context=r.context, status=r_status))
+                                context=r.context, status=r_status,
+                                migrated=migrated))
+    else:
+        rt.note_delivered(s.seq)
     s.state = r.state = "done"
     if s.comp is not None:
         s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
-                            perm=s.perm, remote=False, context=s.context))
+                            perm=s.perm, remote=False, context=s.context,
+                            migrated=migrated))
 
 
 # ---------------------------------------------------------------------------

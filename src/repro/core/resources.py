@@ -183,6 +183,11 @@ class Event:
     remote: bool = False         # True when this is a *remote* completion
     context: Any = None          # user context passed at post time
     status: ErrorCode = ErrorCode.OK
+    # True when the op travelled through a device failover: either it
+    # replayed on the survivor (status ok) or it needs a re-post there
+    # (status retry).  Consumers (AMT executor) use this to re-dispatch
+    # instead of dead-lettering.
+    migrated: bool = False
 
 
 class CompletionObject(HasAttrs):
@@ -386,6 +391,7 @@ class PostedOp:
     delays: int = 0                    # consecutive injected delays
     posted_tick: int = 0               # runtime tick at post time
     fault_mark: Optional[str] = None   # set by FaultyTransport for this hop
+    migrated: bool = False             # re-homed by a device failover
 
 
 class MatchingEngine(HasAttrs):
@@ -619,6 +625,51 @@ class MatchingEngine(HasAttrs):
             return len(self._pending_send), len(self._pending_recv)
         return self._n_send, self._n_recv
 
+    # -- migration -------------------------------------------------------------
+    def extract_pending(self, device: "Device") -> List[PostedOp]:
+        """Remove and return every still-pending op posted on ``device``,
+        in seq order (the order they were posted).  Used by
+        :meth:`NetContext.migrate` to transplant a dead device's
+        un-matched ops into the survivor's engine; the ops keep their
+        cached ``match_key`` so tag/rank matching is preserved."""
+        out: List[PostedOp] = []
+        if self._attrs["kind"] == "queue":
+            for q in (self._pending_send, self._pending_recv):
+                keep = deque()
+                for op in q:
+                    (out if op.device is device else keep).append(op)
+                q.clear()
+                q.extend(keep)
+        else:
+            for buckets in (self._send_buckets, self._recv_buckets):
+                for key in list(buckets):
+                    bucket = buckets[key]
+                    taken = [op for op in bucket if op.device is device]
+                    if not taken:
+                        continue
+                    out.extend(taken)
+                    kept = deque(op for op in bucket
+                                 if op.device is not device)
+                    if kept:
+                        buckets[key] = kept
+                    else:
+                        del buckets[key]
+            for overflow in (self._send_overflow, self._recv_overflow):
+                taken = [op for _, op in overflow if op.device is device]
+                if taken:
+                    out.extend(taken)
+                    overflow[:] = [(k, op) for k, op in overflow
+                                   if op.device is not device]
+            for op in out:
+                if op.kind == "send":
+                    self._n_send -= 1
+                else:
+                    self._n_recv -= 1
+        for op in out:
+            op.engine = None
+        out.sort(key=lambda op: op.seq)
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Packet pool
@@ -708,11 +759,113 @@ class NetContext(HasAttrs):
             return 0
         return sum(rt.pending_for(d) for d in self.devices)
 
+    # -- failover --------------------------------------------------------------
+    def migrate(self, dead: "Device", target: "Device",
+                replay: bool = True) -> "MigrationReport":
+        """Re-home a dead (or dying) device's communication state onto
+        ``target``: endpoints move over, un-matched posted ops
+        transplant into the target's matching engine (tag/rank match
+        keys preserved), and matched-but-unprogressed transfers in the
+        runtime's ledger/retry queue re-point to the survivor.
+
+        Replay semantics: when ``replay`` is true and the two devices
+        communicate over the *same axis*, in-flight transfers replay
+        transparently on the survivor — deliveries carry
+        ``Event.migrated=True`` and the runtime's per-op sequence
+        numbers + dedup window guarantee a transfer that raced the
+        failure is neither lost nor double-delivered.  When the axes
+        differ (or ``replay=False``), matched pairs cannot replay: both
+        sides complete ``retry`` with ``migrated=True`` so the poster
+        (e.g. the AMT executor) re-posts on the survivor.
+
+        The dead device is marked dead and left with a ``migrated_to``
+        forwarding pointer, so stale handles posting through it resolve
+        to the target."""
+        if dead is target:
+            raise ValueError("cannot migrate a device onto itself")
+        if not target.alive:
+            raise ValueError(f"migration target {target!r} is dead")
+        rt = self._runtime
+        if rt is None:
+            rt = target.runtime or dead.runtime
+        if rt is None:
+            rt = _global_runtime()
+        can_replay = replay and dead.axis == target.axis
+        target_engine = target.engine
+        if target_engine is None:      # floating target: ambient default
+            target_engine = rt.default_engine
+        # 1. un-matched engine-pending ops: pull them (seq order) out of
+        #    whatever engine they pend in and transplant.
+        moved_ops: List[PostedOp] = []
+        engines = []
+        if dead.engine is not None:
+            engines.append(dead.engine)
+        for ep in dead.endpoints:
+            if ep.engine is not None and ep.engine not in engines:
+                engines.append(ep.engine)
+        if rt.default_engine is not None and rt.default_engine not in engines:
+            engines.append(rt.default_engine)
+        for eng in engines:
+            moved_ops.extend(eng.extract_pending(dead))
+        moved_ops.sort(key=lambda op: op.seq)
+        n_signalled = 0
+        for op in moved_ops:
+            op.device = target
+            op.migrated = True
+            if not can_replay:
+                # match keys derived from (perm, axis_size) no longer
+                # describe the survivor's axis: recompute at re-post.
+                op.match_key = _NO_KEY
+            rt.enqueue_matches(target_engine.post(op))
+        # 2. matched transfers in the ledger / retry queue.
+        n_ledger, n_retry, sig = rt.retarget_pending(
+            dead, target, can_replay=can_replay)
+        n_signalled += sig
+        # 3. endpoints re-home (their resource aliases follow the target
+        #    when they aliased the dead device's own resources).
+        n_eps = 0
+        for ep in list(dead.endpoints):
+            if ep in target.endpoints:
+                continue
+            if ep.engine is dead.engine:
+                ep.engine = target.engine
+            if ep.pool is dead.pool:
+                ep.pool = target.pool
+            if ep.cq is dead.cq:
+                ep.cq = target.cq
+            ep.device = target
+            target.endpoints.append(ep)
+            n_eps += 1
+        dead.endpoints = []
+        dead.mark_dead()
+        dead.migrated_to = target
+        return MigrationReport(dead=dead, target=target, replayed=can_replay,
+                               n_endpoints=n_eps, n_engine_ops=len(moved_ops),
+                               n_ledger=n_ledger, n_retry=n_retry,
+                               n_reposted=n_signalled)
+
     def __repr__(self) -> str:
         name = self._attrs.get("name")
         tag = f" {name!r}" if name else ""
         return (f"NetContext<{self.backend}{tag}, "
                 f"{len(self.devices)} device(s)>")
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    """What :meth:`NetContext.migrate` moved.  ``replayed`` is True when
+    in-flight transfers replay transparently on the survivor;
+    ``n_reposted`` counts matched pairs that instead completed
+    ``retry``/``migrated`` for the poster to re-post."""
+
+    dead: "Device"
+    target: "Device"
+    replayed: bool
+    n_endpoints: int = 0
+    n_engine_ops: int = 0
+    n_ledger: int = 0
+    n_retry: int = 0
+    n_reposted: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -755,6 +908,17 @@ class Device(HasAttrs):
         self.stats = {"posted": 0, "transfers": 0, "progressed": 0,
                       "bytes_moved": 0}
         self.alive = True
+        # ``responsive`` models the *health signal*: a frozen device
+        # (silent death — still "alive" as far as anyone has declared,
+        # but no longer answering progress pings) stops beating and its
+        # pending transfers stall until a HeartbeatMonitor declares it
+        # dead and triggers failover.
+        self.responsive = True
+        self.last_beat = 0           # runtime tick of the last heartbeat
+        # Forwarding pointer set by NetContext.migrate: stale handles to
+        # a migrated device resolve (via resolve_resources) to the
+        # survivor, chained if the survivor itself later migrates.
+        self.migrated_to: Optional["Device"] = None
         self._net_context = net_context
         self.endpoints: List["Endpoint"] = []
         self.transport: Optional["FaultyTransport"] = None
@@ -816,6 +980,31 @@ class Device(HasAttrs):
         call (or immediately via ``runtime().drain_dead``) instead of
         hanging their completion objects forever."""
         self.alive = False
+        self.responsive = False
+
+    def freeze(self) -> None:
+        """Silent death: the device stops answering progress pings (no
+        more heartbeats, its matched transfers stall in the ledger) but
+        nobody has *declared* it dead yet.  A
+        :class:`repro.runtime.fault.HeartbeatMonitor` attached to the
+        runtime notices the missing beats and triggers the configured
+        ``on_dead`` policy (failover / drain / raise)."""
+        self.responsive = False
+
+    def unfreeze(self) -> None:
+        if self.alive:
+            self.responsive = True
+
+    def resolve_migrated(self) -> "Device":
+        """Follow the ``migrated_to`` forwarding chain to the device
+        currently serving this handle's traffic (self when never
+        migrated)."""
+        dev: "Device" = self
+        seen = set()
+        while dev.migrated_to is not None and id(dev) not in seen:
+            seen.add(id(dev))
+            dev = dev.migrated_to
+        return dev
 
     def __repr__(self) -> str:
         name = self._attrs.get("name")
@@ -908,19 +1097,23 @@ class MemoryRegion:
 # ---------------------------------------------------------------------------
 # Fault-injecting transport (seeded, deterministic, CPU-testable)
 # ---------------------------------------------------------------------------
-def signal_error(s: PostedOp, r: PostedOp, code: ErrorCode) -> None:
+def signal_error(s: PostedOp, r: PostedOp, code: ErrorCode,
+                 migrated: bool = False) -> None:
     """Deliver a non-ok completion to both sides of a matched pair
-    (payload-less: the transfer never happened)."""
+    (payload-less: the transfer never happened).  ``migrated=True``
+    stamps the events as failover fallout — consumers treat a
+    ``retry``-status migrated completion as "re-post on the survivor",
+    not as a loss."""
     s.state = r.state = code.value
     if s.comp is not None:
         s.comp.signal(Event(payload=None, op=s.op_name, tag=s.tag,
                             perm=s.perm, remote=False, context=s.context,
-                            status=code))
+                            status=code, migrated=migrated))
     if r.comp is not None:
         remote = s.op_name in ("put", "am")
         r.comp.signal(Event(payload=None, op=s.op_name, tag=r.tag,
                             perm=r.perm, remote=remote, context=r.context,
-                            status=code))
+                            status=code, migrated=migrated))
 
 
 @dataclasses.dataclass
@@ -1063,7 +1256,8 @@ class Runtime:
 
     def __init__(self, alloc_default_resources: bool = True,
                  default_axis: Optional[str] = None,
-                 name: Optional[str] = None) -> None:
+                 name: Optional[str] = None,
+                 dedup_window: int = 4096) -> None:
         self.name = name or f"runtime-{next(_RUNTIME_IDS)}"
         self._seq = itertools.count()
         self._reg_ids = itertools.count(1)
@@ -1098,6 +1292,18 @@ class Runtime:
         self.transport: Optional[FaultyTransport] = None
         self._retry_q: List[Tuple[int, int, Tuple[PostedOp, PostedOp]]] = []
         self._timed: List[PostedOp] = []
+        # Failover machinery: an optional heartbeat monitor polled each
+        # progress tick (duck-typed: anything with ``poll(rt)``), and the
+        # delivered-seq dedup window that makes post-migration replay
+        # exactly-once (a migrated transfer whose seq already delivered
+        # is suppressed; the window is bounded so memory stays flat).
+        self.heartbeat: Optional[Any] = None
+        self._dedup_window = max(1, int(dedup_window))
+        self._delivered_seqs: set = set()
+        self._delivered_order: deque = deque()
+        self.failover_stats = {"failovers": 0, "migrated_ops": 0,
+                               "dedup_suppressed": 0, "replayed": 0,
+                               "reposted": 0}
         # Aggregation-plan cache: (axis, perm-key, dtype-sig, shape-sig)
         # -> concat/slice layout, reused across progress calls so
         # steady-state loops don't re-derive pack/unpack plans.
@@ -1307,10 +1513,111 @@ class Runtime:
     def has_inflight(self) -> bool:
         """True while time-based work (backoff retries, armed deadlines)
         can still make progress — callers polling the engine should keep
-        driving ``progress()`` rather than declare deadlock."""
+        driving ``progress()`` rather than declare deadlock.  With a
+        heartbeat monitor attached, ledger entries stalled on a frozen
+        device also count: the monitor will declare the device dead and
+        fail the transfers over (or drain them), so they are recoverable
+        by driving more progress."""
         if self._retry_q:
             return True
+        if self.heartbeat is not None and self._n_pending:
+            return True
         return any(op.state == "pending" for op in self._timed)
+
+    # -- failover: dedup window, ledger retarget, survivor choice -------------
+    def note_delivered(self, seq: int) -> None:
+        """Record an op seq whose receiver-side delivery was absorbed.
+        The window is bounded (``dedup_window``): old seqs age out, so a
+        migrated replay arriving *after* eviction delivers again — the
+        window must cover the failure-detection latency, not history."""
+        if seq in self._delivered_seqs:
+            return
+        self._delivered_seqs.add(seq)
+        self._delivered_order.append(seq)
+        while len(self._delivered_order) > self._dedup_window:
+            self._delivered_seqs.discard(self._delivered_order.popleft())
+
+    def was_delivered(self, seq: int) -> bool:
+        return seq in self._delivered_seqs
+
+    def retarget_pending(self, dead: Device, target: Device,
+                         can_replay: bool = True) -> Tuple[int, int, int]:
+        """Re-point ledger/retry-queue matches touching ``dead`` at
+        ``target``.  Replayable pairs re-enqueue (marked migrated);
+        non-replayable ones complete ``retry``+``migrated`` on both
+        sides.  Returns (n_ledger, n_retry, n_signalled)."""
+        def _repoint(s: PostedOp, r: PostedOp) -> None:
+            if s.device is dead:
+                s.device = target
+            if r.device is dead:
+                r.device = target
+            s.migrated = r.migrated = True
+
+        n_ledger = n_retry = n_signalled = 0
+        for s, r in self.take_ready(dead):
+            if s.device is not dead and r.device is not dead:
+                self.enqueue_matches([(s, r)])   # foreign entry: put back
+                continue
+            n_ledger += 1
+            _repoint(s, r)
+            if can_replay:
+                self.enqueue_matches([(s, r)])
+            else:
+                signal_error(s, r, ErrorCode.RETRY, migrated=True)
+                n_signalled += 1
+        keep: List[Tuple[int, int, Tuple[PostedOp, PostedOp]]] = []
+        for entry in self._retry_q:
+            s, r = entry[2]
+            if s.device is not dead and r.device is not dead:
+                keep.append(entry)
+                continue
+            n_retry += 1
+            _repoint(s, r)
+            if can_replay:
+                keep.append(entry)
+            else:
+                signal_error(s, r, ErrorCode.RETRY, migrated=True)
+                n_signalled += 1
+        if len(keep) != len(self._retry_q):
+            heapq.heapify(keep)
+            self._retry_q = keep
+        return n_ledger, n_retry, n_signalled
+
+    def failover(self, dev: Device, target: Optional[Device] = None,
+                 replay: bool = True) -> "MigrationReport":
+        """Migrate ``dev``'s communication state onto a survivor.
+
+        Without an explicit ``target``, picks the least-loaded alive
+        device (fewest pending transfers), preferring same-net-context,
+        same-axis candidates — endpoints, un-matched ops, and in-flight
+        ledger entries move per :meth:`NetContext.migrate`.  Raises
+        ``RuntimeError`` when no survivor exists."""
+        if target is None:
+            def rank(d: Device) -> Tuple[int, int, int]:
+                same_nc = 0 if d.net_context is dev.net_context else 1
+                same_axis = 0 if d.axis == dev.axis else 1
+                return (same_nc, same_axis, self.pending_for(d))
+
+            candidates = [d for d in self.devices()
+                          if d is not dev and d.alive and d.responsive]
+            if not candidates:
+                raise RuntimeError(
+                    f"failover({dev!r}): no alive device left on "
+                    f"{self.name}")
+            target = min(candidates, key=rank)
+        nc = dev.net_context or target.net_context \
+            or self.default_net_context
+        if nc is None:
+            nc = self.net_context()
+        report = nc.migrate(dev, target, replay=replay)
+        self.failover_stats["failovers"] += 1
+        self.failover_stats["migrated_ops"] += (
+            report.n_engine_ops + report.n_ledger + report.n_retry)
+        if report.replayed:
+            self.failover_stats["replayed"] += (
+                report.n_ledger + report.n_retry)
+        self.failover_stats["reposted"] += report.n_reposted
+        return report
 
 
 # ---------------------------------------------------------------------------
@@ -1420,6 +1727,9 @@ def resolve_resources(runtime: Optional[Runtime] = None,
             f"not the explicitly passed {device!r}")
     if endpoint is not None and device is None:
         device = endpoint.device
+    if device is not None and device.migrated_to is not None:
+        # stale handle to a failed-over device: forward to the survivor
+        device = device.resolve_migrated()
     rt = runtime
     if rt is None and device is not None:
         rt = device.runtime          # None when the device floats

@@ -28,7 +28,10 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
           stage_params: Any, microbatches: jax.Array, *,
           axis: str = "pipe", use_lcx: bool = True,
           runtime: Optional[Any] = None,
-          device: Optional[Any] = None) -> jax.Array:
+          device: Optional[Any] = None,
+          rank: Optional[jax.Array] = None,
+          failover: bool = False,
+          heartbeat: Optional[Any] = None) -> jax.Array:
     """GPipe forward.  ``microbatches`` [M, mb, ...] (same value on every
     rank; only rank 0 injects).  Returns [M, mb, ...] outputs, valid on
     the *last* rank and broadcast to all ranks at the end.
@@ -39,23 +42,39 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
     ``use_lcx=True`` drives the schedule through an AMT executor (tick
     tasks chained by LCX-put edges); ``use_lcx=False`` is the native
     ``lax.scan``/``ppermute`` reference schedule.
+
+    ``rank`` overrides ``lax.axis_index(axis)`` as this rank's pipeline
+    position — pass it where axis_index cannot lower (e.g. XLA CPU SPMD
+    partitioning under partial-manual shard_map).
+
+    ``failover=True`` (or an injected ``heartbeat`` monitor) provisions a
+    warm standby device on the pipe axis and attaches a
+    ``HeartbeatMonitor(on_dead="failover")`` to the pipeline runtime: a
+    stage device declared dead mid-schedule migrates its endpoints and
+    in-flight activation transfers onto the standby, and the executor
+    re-dispatches the affected tick tasks (``docs/faults.md``).
     """
     if not use_lcx:
         return _gpipe_native(stage_fn, stage_params, microbatches,
-                             axis=axis)
+                             axis=axis, rank=rank)
     return _gpipe_taskgraph(stage_fn, stage_params, microbatches,
-                            axis=axis, runtime=runtime, device=device)
+                            axis=axis, runtime=runtime, device=device,
+                            rank=rank, failover=failover,
+                            heartbeat=heartbeat)
 
 
 def _gpipe_taskgraph(stage_fn: Callable[[Any, jax.Array], jax.Array],
                      stage_params: Any, microbatches: jax.Array, *,
                      axis: str, runtime: Optional[Any] = None,
-                     device: Optional[Any] = None) -> jax.Array:
+                     device: Optional[Any] = None,
+                     rank: Optional[jax.Array] = None,
+                     failover: bool = False,
+                     heartbeat: Optional[Any] = None) -> jax.Array:
     import repro.core as lcx
     from repro.amt import Executor
 
     n = axis_size(axis)
-    idx = lax.axis_index(axis)
+    idx = rank if rank is not None else lax.axis_index(axis)
     M = microbatches.shape[0]
     mb_shape = microbatches.shape[1:]
 
@@ -67,6 +86,14 @@ def _gpipe_taskgraph(stage_fn: Callable[[Any, jax.Array], jax.Array],
     if runtime is None:
         runtime = lcx.Runtime(name="gpipe")
     dev = device if device is not None else runtime.device(axis=axis)
+    if failover or heartbeat is not None:
+        from repro.runtime.fault import HeartbeatMonitor
+        # Warm standby on the same axis: the migration target when the
+        # heartbeat declares a stage device dead mid-schedule.
+        runtime.device(axis=axis)
+        if heartbeat is None:
+            heartbeat = HeartbeatMonitor(on_dead="failover")
+        heartbeat.attach(runtime)
     ex = Executor(device=dev, runtime=runtime, name="gpipe")
     # Mutable per-rank cells the tick tasks thread state through: the
     # activation arriving from the predecessor stage, and the output
@@ -109,11 +136,12 @@ def _gpipe_taskgraph(stage_fn: Callable[[Any, jax.Array], jax.Array],
 
 def _gpipe_native(stage_fn: Callable[[Any, jax.Array], jax.Array],
                   stage_params: Any, microbatches: jax.Array, *,
-                  axis: str) -> jax.Array:
+                  axis: str,
+                  rank: Optional[jax.Array] = None) -> jax.Array:
     """Reference schedule: one ``lax.scan`` over ticks, shifts via raw
     ``ppermute`` (no LCX, no executor)."""
     n = axis_size(axis)
-    idx = lax.axis_index(axis)
+    idx = rank if rank is not None else lax.axis_index(axis)
     M = microbatches.shape[0]
     mb_shape = microbatches.shape[1:]
 

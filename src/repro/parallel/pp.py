@@ -62,15 +62,28 @@ def pp_apply_model(cfg: Any, params: PyTree, tokens: jax.Array, *,
         out, _ = lax.scan(body, xm, stack_local)
         return out
 
-    def region(stack, micro_):
+    def region(stack, micro_, rank_arr):
         # gpipe owns a private LCX runtime; no global init needed.
-        return gpipe(stage_fn, stack, micro_, axis="pipe")
+        # rank arrives as sharded data (each rank holds its own index)
+        # because lax.axis_index lowers to PartitionId, which XLA CPU
+        # SPMD partitioning rejects under partial-manual shard_map.
+        # The region is fully manual; logical-axis constraints inside it
+        # resolve to no-ops (sharding.py skips bound axes).
+        return gpipe(stage_fn, stack, micro_, axis="pipe",
+                     rank=rank_arr[0])
 
     from repro.compat import shard_map
     stack_spec = jax.tree.map(lambda _: P("pipe"), params["stack"])
+    ranks = jnp.arange(pipe, dtype=jnp.int32)
+    # Fully-manual shard_map: the pinned XLA release hard-aborts on
+    # ppermute under partial-manual SPMD partitioning (and axis_index
+    # lowers to PartitionId, which it rejects outright) — so the region
+    # is manual on every mesh axis, with activations replicated across
+    # non-pipe axes.  Partial-manual ({"pipe"} only) restores intra-stage
+    # GSPMD once the toolchain moves past that bug.
     out_micro = shard_map(
-        region, mesh=mesh, in_specs=(stack_spec, P()), out_specs=P(),
-        axis_names={"pipe"}, check=False)(params["stack"], micro)
+        region, mesh=mesh, in_specs=(stack_spec, P(), P("pipe")),
+        out_specs=P(), check=False)(params["stack"], micro, ranks)
     x = out_micro.reshape(b, s, d)
     return _head_out(cfg, params, x)
 

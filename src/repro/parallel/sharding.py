@@ -114,6 +114,18 @@ def ep_axis_name() -> str:
 # ---------------------------------------------------------------------------
 # spec resolution
 # ---------------------------------------------------------------------------
+def _bound_axis_names() -> frozenset:
+    """Mesh axes currently bound in the trace's axis env — i.e. manual
+    inside a shard_map/vmap region.  A GSPMD constraint naming a manual
+    axis is rejected (and must be: the data is already local), so rule
+    resolution skips them."""
+    try:
+        from jax._src import core as _jcore
+        return frozenset(_jcore.get_axis_env().axis_sizes)
+    except Exception:  # pragma: no cover - jax-version drift
+        return frozenset()
+
+
 def _axes_for(dim: Optional[str], size: Optional[int], mesh: Mesh,
               used: set, rules: Rules) -> Optional[Tuple[str, ...]]:
     if dim is None:
@@ -143,7 +155,7 @@ def logical_spec(dims: Sequence[Optional[str]],
     rules = rules or active_rules()
     if mesh is None:
         return P()
-    used: set = set()
+    used: set = set(_bound_axis_names())
     parts = []
     for i, d in enumerate(dims):
         size = None if shape is None else int(shape[i])
@@ -162,6 +174,8 @@ def constrain(x: jax.Array, dims: Sequence[Optional[str]]) -> jax.Array:
     if mesh is None:
         return x
     spec = logical_spec(dims, x.shape, mesh)
+    if not spec:  # nothing shardable (e.g. every rule axis is manual)
+        return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 

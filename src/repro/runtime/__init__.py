@@ -1,7 +1,9 @@
-from .fault import (FailureInjector, NodeFailure, StragglerMonitor,
-                    elastic_reshard, fail_device, shrink_mesh_shape)
+from .fault import (FailureInjector, HeartbeatMonitor, NodeFailure,
+                    StragglerMonitor, elastic_reshard, fail_device,
+                    shrink_mesh_shape)
 from .trainer import TrainConfig, Trainer, make_train_step
 
-__all__ = ["FailureInjector", "NodeFailure", "StragglerMonitor",
+__all__ = ["FailureInjector", "HeartbeatMonitor", "NodeFailure",
+           "StragglerMonitor",
            "elastic_reshard", "fail_device", "shrink_mesh_shape",
            "TrainConfig", "Trainer", "make_train_step"]

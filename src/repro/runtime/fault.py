@@ -10,6 +10,10 @@ driven by injectable signals so every policy is testable on CPU:
   slower than ``threshold ×`` EMA; after ``patience`` consecutive flags
   it recommends a remesh (drop the slow host) — the AMT-style answer to
   stragglers (work steals around slow nodes; SPMD can only reshape).
+- :class:`HeartbeatMonitor` watches per-device heartbeats (progress-tick
+  driven, same EMA idiom) and declares silently dead devices, triggering
+  live endpoint failover (``runtime.failover``), a fatal drain, or a
+  raised ``NodeFailure`` per its ``on_dead`` policy.
 - :func:`elastic_reshard` moves live state onto a new mesh.
 """
 from __future__ import annotations
@@ -110,6 +114,109 @@ class StragglerMonitor:
             # only fold healthy steps into the EMA
             self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
         return verdict
+
+
+class HeartbeatMonitor:
+    """Progress-tick-driven device liveness detection with automatic
+    failover (builds on :class:`StragglerMonitor`'s EMA idiom).
+
+    Every ``lcx.progress()`` call pings the runtime's devices: each
+    alive, responsive device records a beat (``device.last_beat`` =
+    current tick), then the monitor polls.  A healthy device's
+    inter-beat gap folds into a per-device EMA; a device whose current
+    gap exceeds ``threshold ×`` EMA (and at least ``grace`` ticks) for
+    ``patience`` consecutive polls is declared dead:
+
+    - ``on_dead="failover"`` — ``runtime.failover(dev)``: endpoints,
+      un-matched posted ops, and in-flight ledger entries migrate onto
+      the least-loaded survivor (see ``NetContext.migrate``).
+    - ``on_dead="drain"``   — :func:`fail_device`: the classic fatal
+      drain (completion objects observe the loss).
+    - ``on_dead="raise"``   — raise :class:`NodeFailure` out of the
+      progress call.
+
+    Attach with ``monitor.attach(rt)`` (sets ``rt.heartbeat``);
+    ``monitor.events`` records every declaration for postmortems and
+    recovery-latency measurement (``failoverbench.py``)."""
+
+    POLICIES = ("failover", "drain", "raise")
+
+    def __init__(self, threshold: float = 3.0, patience: int = 2,
+                 grace: int = 4, ema_decay: float = 0.9,
+                 on_dead: str = "failover", replay: bool = True) -> None:
+        if on_dead not in self.POLICIES:
+            raise ValueError(f"unknown on_dead policy {on_dead!r}")
+        self.threshold = threshold
+        self.patience = patience
+        self.grace = max(1, grace)
+        self.ema_decay = ema_decay
+        self.on_dead = on_dead
+        self.replay = replay
+        # per-device (id-keyed): EMA of inter-beat gaps, last seen beat,
+        # consecutive suspect polls
+        self._ema: Dict[int, float] = {}
+        self._seen_beat: Dict[int, int] = {}
+        self._suspect: Dict[int, int] = {}
+        self.events: List[Dict[str, Any]] = []
+
+    def attach(self, runtime: Any) -> "HeartbeatMonitor":
+        runtime.heartbeat = self
+        return self
+
+    def poll(self, runtime: Any) -> List[Any]:
+        """Called by ``progress()`` after the beat sweep.  Returns the
+        devices declared dead this poll (already handled per policy)."""
+        declared: List[Any] = []
+        tick = runtime.tick
+        for dev in runtime.devices():
+            if not dev.alive:
+                continue
+            key = id(dev)
+            seen = self._seen_beat.get(key)
+            if seen is None:
+                # first sighting: start the clock at this tick
+                self._seen_beat[key] = dev.last_beat or tick
+                continue
+            if dev.last_beat > seen:
+                gap = dev.last_beat - seen
+                self._seen_beat[key] = dev.last_beat
+                self._suspect[key] = 0
+                prev = self._ema.get(key)
+                self._ema[key] = gap if prev is None else (
+                    self.ema_decay * prev + (1 - self.ema_decay) * gap)
+                continue
+            # no beat since last poll: how overdue is it?
+            gap = tick - seen
+            expected = max(self._ema.get(key, 1.0), 1.0)
+            if gap >= self.grace and gap > self.threshold * expected:
+                self._suspect[key] = self._suspect.get(key, 0) + 1
+                if self._suspect[key] >= self.patience:
+                    declared.append(dev)
+                    self._suspect[key] = 0
+        for dev in declared:
+            self._declare_dead(runtime, dev)
+        return declared
+
+    def _declare_dead(self, runtime: Any, dev: Any) -> None:
+        event: Dict[str, Any] = {"tick": runtime.tick, "device": dev,
+                                 "policy": self.on_dead}
+        if self.on_dead == "failover":
+            try:
+                report = runtime.failover(dev, replay=self.replay)
+                event["target"] = report.target
+                event["report"] = report
+            except RuntimeError as e:
+                # no survivor left: degrade to the fatal drain
+                event["policy"] = "drain"
+                event["error"] = str(e)
+                fail_device(dev, runtime=runtime)
+        elif self.on_dead == "drain":
+            fail_device(dev, runtime=runtime)
+        self.events.append(event)
+        if self.on_dead == "raise":
+            dev.mark_dead()
+            raise NodeFailure(
+                f"heartbeat lost on {dev!r} at tick {runtime.tick}", 1)
 
 
 def elastic_reshard(tree: PyTree, shardings: PyTree) -> PyTree:

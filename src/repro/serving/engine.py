@@ -105,11 +105,15 @@ class ServingEngine:
                  kernels: Optional[Dict[str, Any]] = None, *,
                  use_executor: bool = True,
                  lcx_runtime: Optional[Any] = None,
-                 lcx_device: Optional[Any] = None) -> None:
+                 lcx_device: Optional[Any] = None,
+                 failover: bool = False,
+                 heartbeat: Optional[Any] = None) -> None:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.kernels = kernels
+        self.heartbeat: Optional[Any] = heartbeat
+        self.standby_device: Optional[Any] = None
         if use_executor:
             import repro.core as lcx
             from repro.amt import Executor
@@ -124,6 +128,17 @@ class ServingEngine:
             self.lcx_runtime: Optional[Any] = lcx_runtime
             self._executor: Optional[Executor] = Executor(
                 name="serving", runtime=lcx_runtime, device=lcx_device)
+            if failover or heartbeat is not None:
+                from repro.runtime.fault import HeartbeatMonitor
+                # Warm standby on the serving device's axis: if the
+                # heartbeat declares the primary dead mid-stream, its
+                # endpoints and in-flight admission traffic migrate here
+                # and the executor re-dispatches the affected tasks.
+                primary = self._executor.device
+                self.standby_device = lcx_runtime.device(axis=primary.axis)
+                if self.heartbeat is None:
+                    self.heartbeat = HeartbeatMonitor(on_dead="failover")
+                self.heartbeat.attach(lcx_runtime)
         else:
             self.lcx_runtime = lcx_runtime
             self._executor = None

@@ -1,0 +1,456 @@
+"""Elastic endpoint migration: device death with live failover.
+
+Covers the failover subsystem end to end: ``NetContext.migrate`` /
+``runtime.failover`` (endpoint re-homing, ledger + retry-queue + pending
+op transplant, sequence-number replay with dedup), the progress-tick
+:class:`HeartbeatMonitor` and its ``on_dead`` policies, AMT executor
+re-dispatch of migrated completions, the gpipe schedule surviving a
+stage-device kill, and the serving engine's failover wiring.
+
+All scenarios are seeded and trace-time (loopback + vmap-emulated axes,
+as in test_faults), so a "device kill" is ``device.freeze()`` — the
+device stops beating/progressing but its state is intact, exactly the
+silent-death case the heartbeat exists for."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as lcx
+from repro.amt import Executor
+from repro.runtime import HeartbeatMonitor, NodeFailure
+
+
+def drain(rt, cq, want, max_ticks=400):
+    for _ in range(max_ticks):
+        lcx.progress()
+        if len(cq) >= want and not rt.has_inflight():
+            break
+    return cq.pop_all()
+
+
+def fresh_pair():
+    lcx.init()
+    rt = lcx.runtime()
+    return rt, rt.device(), rt.device()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: kill one of two devices mid-pingpong under 10% drop
+# ---------------------------------------------------------------------------
+def test_kill_one_of_two_devices_mid_pingpong():
+    rt, ping, pong = fresh_pair()
+    lcx.install_transport(lcx.FaultyTransport(seed=11, drop=0.1))
+    hb = HeartbeatMonitor(threshold=2.0, patience=2, grace=3,
+                          on_dead="failover").attach(rt)
+    for _ in range(4):
+        lcx.progress()                      # beat history for the EMA
+    cq = lcx.CompletionQueue()
+    n = 24
+    # pingpong: alternate the posting side every transfer
+    for i in range(n):
+        dev = ping if i % 2 == 0 else pong
+        lcx.put_x(jnp.float32(i)).remote_comp(cq).device(dev) \
+            .tag(i).max_retries(32)()
+    # every transfer is in flight (drop retries included) when the ping
+    # side dies silently — delivery REQUIRES the failover to happen
+    ping.freeze()
+    evs = drain(rt, cq, n)
+    got = sorted(float(ev.payload) for ev in evs)
+    # exactly once: no transfer lost, none double-delivered
+    assert got == [float(i) for i in range(n)], got
+    assert len(hb.events) == 1 and hb.events[0]["device"] is ping
+    assert not ping.alive and ping.migrated_to is not None
+    assert ping.migrated_to.alive
+    assert rt.failover_stats["failovers"] == 1
+
+
+def test_migrated_flag_set_on_replayed_deliveries():
+    rt, a, b = fresh_pair()
+    cq = lcx.CompletionQueue()
+    for i in range(4):
+        lcx.put_x(jnp.float32(i)).remote_comp(cq).device(a).tag(i)()
+    a.freeze()
+    rt.failover(a, target=b)
+    evs = drain(rt, cq, 4)
+    assert [ev.migrated for ev in evs] == [True] * 4
+    assert sorted(float(e.payload) for e in evs) == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_unmatched_send_migrates_and_matches_on_target():
+    rt, a, b = fresh_pair()
+    scq, rcq = lcx.CompletionQueue(), lcx.CompletionQueue()
+    lcx.send_x(jnp.float32(42.0)).comp(scq).device(a).tag(9)()
+    a.freeze()
+    rep = rt.failover(a, target=b)
+    assert rep.n_engine_ops == 1            # transplanted while pending
+    # the match key (tag/rank) survived: a recv on the TARGET matches it
+    lcx.recv_x(jnp.zeros((), jnp.float32)).comp(rcq).device(b).tag(9)()
+    evs = drain(rt, rcq, 1)
+    assert float(evs[0].payload) == 42.0 and evs[0].migrated
+
+
+def test_failover_picks_least_loaded_survivor():
+    lcx.init()
+    rt = lcx.runtime()
+    a, busy, idle = rt.device(), rt.device(), rt.device()
+    cq = lcx.CompletionQueue()
+    for i in range(5):                      # load the busy candidate
+        lcx.put_x(jnp.float32(i)).remote_comp(cq).device(busy).tag(i)()
+    assert rt.pending_for(busy) > rt.pending_for(idle)
+    a.freeze()
+    rep = rt.failover(a)
+    assert rep.target is not busy and rep.target is not a
+
+
+def test_failover_without_survivor_raises():
+    lcx.init(alloc_default_resources=False)
+    rt = lcx.runtime()
+    a = rt.device()
+    a.freeze()
+    with pytest.raises(RuntimeError, match="no alive device"):
+        rt.failover(a)
+
+
+def test_resolve_resources_follows_migration_chain():
+    rt, a, b = fresh_pair()
+    a.freeze()
+    rt.failover(a, target=b)
+    assert a.resolve_migrated() is b
+    # ops explicitly targeting the dead device re-route to the survivor
+    cq = lcx.CompletionQueue()
+    lcx.put_x(jnp.float32(1.0)).remote_comp(cq).device(a).tag(0)()
+    evs = drain(rt, cq, 1)
+    assert float(evs[0].payload) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat policies
+# ---------------------------------------------------------------------------
+def _stalled_runtime(policy, **kw):
+    lcx.init()
+    rt = lcx.runtime()
+    a, b = rt.device(), rt.device()
+    hb = HeartbeatMonitor(threshold=2.0, patience=2, grace=3,
+                          on_dead=policy, **kw).attach(rt)
+    for _ in range(4):
+        lcx.progress()
+    cq = lcx.CompletionQueue()
+    for i in range(3):
+        lcx.put_x(jnp.float32(i)).remote_comp(cq).device(a).tag(i)()
+    a.freeze()
+    return rt, a, b, hb, cq
+
+
+def test_heartbeat_policy_drain_surfaces_fatal():
+    rt, a, _, hb, cq = _stalled_runtime("drain")
+    for _ in range(40):
+        lcx.progress()
+        if len(cq) >= 3:
+            break
+    evs = cq.pop_all()
+    assert {ev.status for ev in evs} == {lcx.ErrorCode.FATAL}
+    assert not a.alive and a.migrated_to is None
+    assert hb.events[0]["policy"] == "drain"
+
+
+def test_heartbeat_policy_raise():
+    rt, a, _, hb, cq = _stalled_runtime("raise")
+    with pytest.raises(NodeFailure, match="heartbeat lost"):
+        for _ in range(40):
+            lcx.progress()
+    assert not a.alive
+
+
+def test_heartbeat_ignores_healthy_jitter():
+    lcx.init()
+    rt = lcx.runtime()
+    rt.device(), rt.device()
+    hb = HeartbeatMonitor(threshold=2.0, patience=2, grace=3).attach(rt)
+    for _ in range(50):
+        lcx.progress()
+    assert hb.events == []
+    assert rt.failover_stats["failovers"] == 0
+
+
+def test_invalid_heartbeat_policy_rejected():
+    with pytest.raises(ValueError, match="on_dead"):
+        HeartbeatMonitor(on_dead="shrug")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: executor drains a TaskGraph with zero dead-letters
+# ---------------------------------------------------------------------------
+def test_executor_drains_taskgraph_under_automatic_failover():
+    lcx.init()
+    rt = lcx.runtime()
+    primary, standby = rt.device(), rt.device()
+    HeartbeatMonitor(threshold=2.0, patience=2, grace=3,
+                     on_dead="failover").attach(rt)
+    for _ in range(4):
+        lcx.progress()
+    ex = Executor(name="fo", runtime=rt, device=primary, fail_fast=False)
+    got = []
+
+    def worker(ctx, i):
+        ctx.put(jnp.float32(i), None, tag=i, max_retries=16)
+        return ctx.suspend(lambda ev: got.append(float(ev.payload)))
+
+    # mid-graph kill: half the workers post before the freeze, half
+    # after — both populations must complete on the survivor
+    for i in range(4):
+        ex.spawn(lambda ctx, _i=i: worker(ctx, _i), priority=4,
+                 name=f"w{i}")
+    ex.spawn(lambda ctx: primary.freeze(), priority=2, name="killer")
+    for i in range(4, 8):
+        ex.spawn(lambda ctx, _i=i: worker(ctx, _i), priority=0,
+                 name=f"w{i}")
+    stats = ex.run()
+    assert sorted(got) == [float(i) for i in range(8)]
+    assert ex.dead_letter == []             # zero dead-letters
+    assert rt.failover_stats["failovers"] == 1
+    assert not primary.alive
+    assert ex.device is primary.resolve_migrated()  # executor re-homed
+
+
+def test_executor_redispatches_on_nonreplayable_migration():
+    """replay=False migration completes suspended ops as RETRY+migrated;
+    the executor re-runs those tasks instead of dead-lettering them."""
+    lcx.init()
+    rt = lcx.runtime()
+    primary = rt.device()
+    rt.device(axis=None)                    # survivor
+    ex = Executor(name="rd", runtime=rt, device=primary, fail_fast=False)
+    got = []
+
+    def worker(ctx, i):
+        ctx.put(jnp.float32(i), None, tag=i)
+        return ctx.suspend(lambda ev: got.append(float(ev.payload)))
+
+    for i in range(4):
+        ex.spawn(lambda ctx, _i=i: worker(ctx, _i), name=f"w{i}")
+
+    def killer(ctx):
+        primary.freeze()
+        rt.failover(primary, replay=False)
+
+    ex.spawn(killer, priority=-5, name="killer")
+    stats = ex.run()
+    assert sorted(got) == [0.0, 1.0, 2.0, 3.0]
+    assert stats["tasks_redispatched"] == 4
+    assert ex.dead_letter == []
+
+
+def test_executor_backpressure_is_per_device():
+    """A busy neighbour device's backlog must not stall admission on the
+    executor's own device (satellite: pending_for, not pending_count)."""
+    lcx.init()
+    rt = lcx.runtime()
+    mine, neighbour = rt.device(), rt.device()
+    ncq = lcx.CompletionQueue()
+    for i in range(32):                     # backlog on the neighbour
+        lcx.put_x(jnp.float32(i)).remote_comp(ncq).device(neighbour) \
+            .tag(i)()
+    ex = Executor(name="bp", runtime=rt, device=mine, max_inflight=8)
+    got = []
+
+    def worker(ctx, i):
+        ctx.put(jnp.float32(i), None, tag=i)
+        return ctx.suspend(lambda ev: got.append(float(ev.payload)))
+
+    for i in range(4):
+        ex.spawn(lambda ctx, _i=i: worker(ctx, _i), name=f"w{i}")
+    stats = ex.run()
+    assert sorted(got) == [0.0, 1.0, 2.0, 3.0]
+    # 4 in-flight on `mine` never reached the limit of 8, even though
+    # the neighbour held 32 pending the whole time
+    assert stats["backpressure_stalls"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cancel / retry-budget / dedup-window edges across migration
+# ---------------------------------------------------------------------------
+def test_cancel_across_migration():
+    rt, a, b = fresh_pair()
+    scq = lcx.CompletionQueue()
+    h = lcx.send_x(jnp.float32(1.0)).comp(scq).device(a).tag(5)()
+    a.freeze()
+    rt.failover(a, target=b)
+    # mid-migration snapshot: an op whose engine pointer is cleared (the
+    # extract→re-post window) refuses cancellation instead of crashing
+    op = h.posted
+    eng, op.engine = op.engine, None
+    assert h.cancel() is False
+    op.engine = eng
+    # after migration the op pends in the TARGET engine: cancel works
+    assert h.cancel() is True
+    assert h.status == "cancelled"
+    evs = scq.pop_all()
+    assert evs[-1].status is lcx.ErrorCode.CANCELLED
+    # cancelled op never matches a later recv on the target
+    rcq = lcx.CompletionQueue()
+    lcx.recv_x(jnp.zeros((), jnp.float32)).comp(rcq).device(b) \
+        .tag(5).timeout(8)()
+    for _ in range(12):
+        lcx.progress()
+        if len(rcq):
+            break
+    assert rcq.pop_all()[0].status is lcx.ErrorCode.TIMEOUT
+
+
+def test_max_retries_budget_preserved_across_migration():
+    rt, a, b = fresh_pair()
+    lcx.install_transport(lcx.FaultyTransport(seed=3, drop=1.0))
+    cq = lcx.CompletionQueue()
+    h = lcx.put_x(jnp.float32(7.0)).remote_comp(cq).device(a) \
+        .max_retries(6)()
+    for _ in range(3):                      # burn part of the budget
+        lcx.progress()
+    burned = h.posted.retries
+    assert burned > 0
+    a.freeze()
+    rt.failover(a, target=b)
+    assert h.posted.retries == burned       # migration did not reset it
+    for _ in range(300):
+        lcx.progress()
+        if len(cq):
+            break
+    assert cq.pop_all()[0].status is lcx.ErrorCode.FATAL
+    assert h.posted.retries == 6            # exhausted the ORIGINAL budget
+
+
+def test_dedup_window_evicts_at_boundary():
+    rt = lcx.Runtime(name="w", alloc_default_resources=False,
+                     dedup_window=4)
+    for seq in range(1, 6):                 # 5 deliveries, window of 4
+        rt.note_delivered(seq)
+    assert not rt.was_delivered(1)          # evicted: boundary crossed
+    assert all(rt.was_delivered(s) for s in range(2, 6))
+    assert not rt.was_delivered(99)
+
+
+def test_replayed_migrated_delivery_suppressed():
+    """A transfer that raced the failure — delivered, then replayed by
+    the failover — is suppressed by the dedup window (exactly once)."""
+    rt, a, b = fresh_pair()
+    scq, rcq = lcx.CompletionQueue(), lcx.CompletionQueue()
+    hs = lcx.send_x(jnp.float32(3.0)).comp(scq).device(a).tag(1)()
+    hr = lcx.recv_x(jnp.zeros((), jnp.float32)).comp(rcq).device(a) \
+        .tag(1)()
+    evs = drain(rt, rcq, 1)
+    assert len(evs) == 1                    # delivered once, seq noted
+    scq.pop_all()
+    # simulate the race: the failover re-homes and replays the pair
+    s, r = hs.posted, hr.posted
+    s.migrated = r.migrated = True
+    s.device = r.device = b
+    rt.enqueue_matches([(s, r)])
+    for _ in range(5):
+        lcx.progress()
+    assert len(rcq) == 0                    # replay suppressed
+    assert len(scq) == 0                    # sender not re-signalled
+    assert rt.failover_stats["dedup_suppressed"] == 1
+
+
+def test_dedup_window_boundary_allows_evicted_replay():
+    """Replays older than the window pass through — the window bounds
+    the exactly-once guarantee (and the suppression state's memory)."""
+    rt = lcx.Runtime(name="wb", dedup_window=2)
+    dev = rt.device()
+    rcqs = []
+    pairs = []
+    for i in range(3):
+        scq, rcq = lcx.CompletionQueue(), lcx.CompletionQueue()
+        hs = lcx.send_x(jnp.float32(i)).comp(scq).device(dev).tag(i) \
+            .runtime(rt)()
+        hr = lcx.recv_x(jnp.zeros((), jnp.float32)).comp(rcq) \
+            .device(dev).tag(i).runtime(rt)()
+        rcqs.append(rcq)
+        pairs.append((hs.posted, hr.posted))
+    for _ in range(10):
+        lcx.progress_x().runtime(rt)()
+        if all(len(q) for q in rcqs):
+            break
+    for q in rcqs:
+        q.pop_all()
+    # seq of pair 0 was evicted by deliveries 1 and 2 (window of 2):
+    # its replay is NOT suppressed; pair 2 is still in-window
+    for s, r in (pairs[0], pairs[2]):
+        s.migrated = r.migrated = True
+        rt.enqueue_matches([(s, r)])
+    for _ in range(5):
+        lcx.progress_x().runtime(rt)()
+    assert len(rcqs[0]) == 1                # evicted → replay delivered
+    assert len(rcqs[2]) == 0                # in-window → suppressed
+    assert rt.failover_stats["dedup_suppressed"] == 1
+
+
+def test_unmigrated_duplicates_still_deliver_twice():
+    """The dedup window guards MIGRATED ops only: plain transport
+    duplicates keep their at-least-once semantics (chaosbench counts
+    extra deliveries)."""
+    lcx.init()
+    rt = lcx.runtime()
+    lcx.install_transport(lcx.FaultyTransport(seed=5, duplicate=1.0))
+    cq = lcx.CompletionQueue()
+    lcx.put_x(jnp.float32(1.0)).remote_comp(cq).tag(0)()
+    for _ in range(20):
+        lcx.progress()
+        if len(cq) >= 2:
+            break
+    evs = cq.pop_all()
+    assert len(evs) == 2
+    assert rt.failover_stats["dedup_suppressed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# gpipe + serving get the same treatment
+# ---------------------------------------------------------------------------
+def test_gpipe_schedule_survives_stage_device_kill():
+    from repro.parallel.pipeline import gpipe
+    n_stages = 4
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (n_stages, 8, 8)) / jnp.sqrt(8.0)
+    micro = jax.random.normal(jax.random.fold_in(key, 2), (6, 3, 8))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    rt = lcx.Runtime(name="gp-fo")
+    dev = rt.device(axis="pipe")
+    dev.freeze()                            # primary dead before tick 0
+
+    def per_rank(w):
+        return gpipe(stage_fn, w, micro, axis="pipe", runtime=rt,
+                     device=dev, failover=True)
+
+    out = jax.vmap(per_rank, axis_name="pipe")(ws)
+    ref = micro
+    for i in range(n_stages):
+        ref = jnp.tanh(ref @ ws[i])
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref),
+                               atol=1e-5)
+    assert rt.failover_stats["failovers"] == 1
+    assert not dev.alive and dev.migrated_to is not None
+
+
+def test_serving_engine_failover_wiring():
+    from repro.configs.base import ModelConfig
+    from repro.models import init_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+    cfg = ModelConfig(name="d", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=97,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      q_block=8)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(n_slots=2, max_seq=32,
+                                                 max_new_tokens=3),
+                        failover=True)
+    assert eng.heartbeat is not None
+    assert eng.lcx_runtime.heartbeat is eng.heartbeat
+    assert eng.standby_device is not None and eng.standby_device.alive
+    # a frozen serving device must not wedge the tick loop
+    eng._executor.device.freeze()
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32)))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and done[0].error is None
